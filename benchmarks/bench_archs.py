@@ -1,0 +1,30 @@
+"""Roofline summary per (arch × shape): reads the dry-run + roofline
+artifacts (produced by `python -m repro.launch.dryrun` and
+`python -m repro.analysis.roofline`) and emits one row per cell."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = False) -> None:
+    path = Path("runs/roofline/roofline.json")
+    if not path.exists():
+        emit("archs.roofline.missing", 0,
+             "run `python -m repro.launch.dryrun` then "
+             "`python -m repro.analysis.roofline`")
+        return
+    rows = json.loads(path.read_text())
+    for r in rows:
+        step_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"archs.roofline.{r['arch']}.{r['cell']}", step_s,
+             f"dom={r['dominant']};compute={r['compute_s']:.3e};"
+             f"memory={r['memory_s']:.3e};coll={r['collective_s']:.3e};"
+             f"useful_ratio={r.get('useful_ratio', 0):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Paper Table 6: BSBM-like explore use case (OPTIONAL/FILTER/UNION)."""
+
+from __future__ import annotations
+
+from repro.core import ExecOpts, SparqlEngine
+from repro.rdf.workloads import BSBM_QUERIES
+
+from benchmarks.common import bench_query, bsbm, emit
+
+
+def run(quick: bool = False) -> dict:
+    g, maps = bsbm(400 if quick else 1500)
+    engine = SparqlEngine(g, maps, ExecOpts())
+    out = {}
+    for name, q in sorted(BSBM_QUERIES.items()):
+        res, secs = bench_query(engine, q, repeats=3 if quick else 5)
+        out[name] = (res.count, secs)
+        emit(f"bsbm.table6.{name}", secs, f"count={res.count}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,23 @@
+"""Paper Tables 4/5 stand-in: heterogeneous (YAGO/BTC-like) query suite."""
+
+from __future__ import annotations
+
+from repro.core import ExecOpts, SparqlEngine
+from repro.rdf.workloads import HETERO_QUERIES
+
+from benchmarks.common import bench_query, emit, hetero
+
+
+def run(quick: bool = False) -> dict:
+    g, maps = hetero(8000 if quick else 30000)
+    engine = SparqlEngine(g, maps, ExecOpts())
+    out = {}
+    for name, q in sorted(HETERO_QUERIES.items()):
+        res, secs = bench_query(engine, q, repeats=3 if quick else 5)
+        out[name] = (res.count, secs)
+        emit(f"hetero.table45.{name}", secs, f"count={res.count}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks (CPU execution path = the jnp oracles; Pallas
+kernels are TPU-target and validated in interpret mode by the test suite).
+
+Measures the engine's two join primitives head to head — the +INT decision
+the executor takes per step (tile compare-all vs binary search) — plus the
+filter and aggregation primitives.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.utils.timing import timed
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    b = 1 << (12 if quick else 14)
+    m = 1 << 18
+
+    nbr = jnp.asarray(np.sort(rng.integers(0, 1 << 20, m)).astype(np.int32))
+    lo = jnp.asarray(rng.integers(0, m - 256, b).astype(np.int32))
+    hi = lo + jnp.asarray(rng.integers(1, 256, b).astype(np.int32))
+    tgt = jnp.asarray(rng.integers(0, 1 << 20, b).astype(np.int32))
+    f = jax.jit(lambda: ref.edge_exists_ref(nbr, lo, hi, tgt, n_iters=20))
+    _, secs = timed(f, repeats=5)
+    emit("kernels.edge_exists.binary_search", secs,
+         f"b={b};probe_per_s={b / secs:.3e}")
+
+    for tb in (32, 128):
+        a = jnp.asarray(rng.integers(0, 1 << 20, (b, 1)).astype(np.int32))
+        bt = jnp.asarray(rng.integers(0, 1 << 20, (b, tb)).astype(np.int32))
+        f = jax.jit(lambda a=a, bt=bt: ref.tile_membership_ref(a, bt))
+        _, secs = timed(f, repeats=5)
+        emit(f"kernels.tile_membership.tb{tb}", secs,
+             f"b={b};probe_per_s={b / secs:.3e}")
+
+    bm = jnp.asarray(rng.integers(0, 2**32, (b, 4), dtype=np.uint64)
+                     .astype(np.uint32))
+    req = jnp.asarray(np.array([3, 0, 1, 0], dtype=np.uint32))
+    f = jax.jit(lambda: ref.bitmap_superset_ref(bm, req))
+    _, secs = timed(f, repeats=5)
+    emit("kernels.bitmap_superset", secs, f"b={b}")
+
+    v, d, e, s = 1 << 14, 64, 1 << (14 if quick else 16), 1 << 12
+    table = jnp.asarray(rng.normal(size=(v, d)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, v, e).astype(np.int32))
+    seg = jnp.asarray(np.sort(rng.integers(0, s, e)).astype(np.int32))
+    f = jax.jit(lambda: ref.segment_gather_sum_ref(table, idx, seg, s))
+    _, secs = timed(f, repeats=5)
+    emit("kernels.segment_gather_sum", secs,
+         f"rows_per_s={e / secs:.3e}")
+
+
+if __name__ == "__main__":
+    run()

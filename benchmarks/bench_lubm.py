@@ -1,0 +1,51 @@
+"""Paper Tables 1/2/3: LUBM suite across scale factors.
+
+Emits graph-size stats (Table 1), solution counts (Table 2 sanity: constant
+queries stay constant, increasing queries grow), and per-query elapsed time
+(Table 3) for the optimized TurboHOM++ configuration.
+"""
+
+from __future__ import annotations
+
+from repro.core import ExecOpts, SparqlEngine
+from repro.rdf.workloads import LUBM_CONSTANT, LUBM_INCREASING, LUBM_QUERIES
+
+from benchmarks.common import bench_query, emit, lubm_direct, lubm_typeaware
+
+SCALES = [(1, 0.6), (2, 0.6), (4, 0.6)]
+
+
+def run(quick: bool = False) -> dict:
+    scales = SCALES[:2] if quick else SCALES
+    counts: dict[str, dict[int, int]] = {}
+    for scale, density in scales:
+        g, maps = lubm_typeaware(scale, density)
+        gd, _ = lubm_direct(scale, density)
+        emit(f"lubm.table1.scale{scale}.type_aware.vertices", 0,
+             str(g.n_vertices))
+        emit(f"lubm.table1.scale{scale}.type_aware.edges", 0, str(g.n_edges))
+        emit(f"lubm.table1.scale{scale}.direct.vertices", 0,
+             str(gd.n_vertices))
+        emit(f"lubm.table1.scale{scale}.direct.edges", 0, str(gd.n_edges))
+        engine = SparqlEngine(g, maps, ExecOpts())
+        for name, q in sorted(LUBM_QUERIES.items()):
+            res, secs = bench_query(engine, q, repeats=3 if quick else 5)
+            counts.setdefault(name, {})[scale] = res.count
+            emit(f"lubm.table3.scale{scale}.{name}", secs,
+                 f"count={res.count}")
+    # Table 2 sanity
+    if len(scales) >= 2:
+        s0, s1 = scales[0][0], scales[-1][0]
+        for name in LUBM_CONSTANT:
+            ok = counts[name][s0] == counts[name][s1]
+            emit(f"lubm.table2.constant.{name}", 0,
+                 f"{'OK' if ok else 'VIOLATION'}:{counts[name]}")
+        for name in LUBM_INCREASING:
+            ok = counts[name][s1] > counts[name][s0]
+            emit(f"lubm.table2.increasing.{name}", 0,
+                 f"{'OK' if ok else 'VIOLATION'}:{counts[name]}")
+    return counts
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks datasets
+(CI-sized); default sizes match EXPERIMENTS.md.  Select suites with
+``--only lubm,opts``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+SUITES = ["lubm", "typeaware", "opts", "parallel", "hetero", "bsbm",
+          "kernels", "archs"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help=f"comma list from {SUITES}")
+    args = ap.parse_args()
+    chosen = args.only.split(",") if args.only else SUITES
+    print("name,us_per_call,derived", flush=True)
+    t0 = time.time()
+    for suite in chosen:
+        mod = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
+        t1 = time.time()
+        try:
+            mod.run(quick=args.quick)
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{suite}.SUITE_FAILED,0,{type(e).__name__}:{e}",
+                  flush=True)
+            import traceback
+
+            traceback.print_exc(file=sys.stderr)
+        print(f"_meta.{suite}.suite_seconds,{(time.time() - t1) * 1e6:.0f},",
+              flush=True)
+    print(f"_meta.total_seconds,{(time.time() - t0) * 1e6:.0f},", flush=True)
+
+
+if __name__ == "__main__":
+    main()

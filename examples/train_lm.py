@@ -1,0 +1,44 @@
+"""Train a small qwen3-style LM for a few hundred steps with the full
+fault-tolerant loop (checkpoints, resumable stream, straggler tracking).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_arch
+from repro.models import transformer
+from repro.train.data import TokenStream
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.trainstep import make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=64)
+ap.add_argument("--ckpt", default="runs/example_lm")
+args = ap.parse_args()
+
+# reduced qwen3 geometry (same code path as the full config)
+cfg, _ = get_arch("qwen3-8b").smoke()
+cfg = dataclasses.replace(cfg, vocab=512)
+
+params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+opt_cfg = OptConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+opt_state = adamw_init(params, opt_cfg)
+stream = TokenStream(vocab=cfg.vocab, batch=args.batch, seq=args.seq)
+step = jax.jit(make_train_step(transformer.loss_fn, cfg, opt_cfg))
+
+trainer = Trainer(step, stream,
+                  LoopConfig(total_steps=args.steps, ckpt_every=50,
+                             ckpt_dir=args.ckpt, log_every=20),
+                  params, opt_state)
+end = trainer.fit()
+print(f"finished at step {end}")
+print("last metrics:", trainer.metrics_log[-1])
+print("median step time:", f"{trainer.tracker.median * 1e3:.1f}ms")
+print("checkpoints kept:", trainer.ckpt.all_steps())

@@ -1,0 +1,41 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+10 assigned architectures + the paper's own engine workload."""
+
+from __future__ import annotations
+
+from repro.configs.common import (ArchDef, Cell, GNN_SHAPES, LM_SHAPES,
+                                  RECSYS_SHAPES)
+
+_ARCH_MODULES = {
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "qwen2-1.5b": "repro.configs.qwen2_1p5b",
+    "minitron-8b": "repro.configs.minitron_8b",
+    "deepseek-v2-236b": "repro.configs.deepseek_v2_236b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "dimenet": "repro.configs.dimenet",
+    "meshgraphnet": "repro.configs.meshgraphnet",
+    "pna": "repro.configs.pna",
+    "gcn-cora": "repro.configs.gcn_cora",
+    "dlrm-rm2": "repro.configs.dlrm_rm2",
+    "turbohom": "repro.configs.turbohom",
+}
+
+ASSIGNED = tuple(k for k in _ARCH_MODULES if k != "turbohom")
+
+
+def get_arch(name: str) -> ArchDef:
+    import importlib
+
+    mod = _ARCH_MODULES.get(name)
+    if mod is None:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(mod).ARCH
+
+
+def all_archs() -> list[str]:
+    return sorted(_ARCH_MODULES)
+
+
+__all__ = ["ArchDef", "Cell", "get_arch", "all_archs", "ASSIGNED",
+           "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES"]

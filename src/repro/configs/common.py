@@ -1,0 +1,162 @@
+"""Architecture registry plumbing.
+
+Each config module defines an ``ArchDef``: the exact published configuration,
+its assigned input-shape cells, ShapeDtypeStruct input specs for the dry-run,
+and a reduced smoke configuration + real batch for CPU tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Cell:
+    name: str
+    kind: str  # "train" | "prefill" | "decode" | "serve" | "retrieval"
+    meta: dict = field(default_factory=dict)
+
+
+@dataclass
+class ArchDef:
+    name: str
+    family: str  # "lm" | "gnn" | "recsys" | "engine"
+    config: Any
+    cells: dict[str, Cell]
+    # (cell_name) -> batch pytree of ShapeDtypeStruct
+    input_specs: Callable[[str], dict]
+    # () -> (small_cfg, small_batch_of_real_arrays)
+    smoke: Callable[[], tuple[Any, dict]]
+    loss_fn: Callable | None = None
+    notes: str = ""
+    # per-cell config override (e.g. GNN d_feat follows the shape cell)
+    cell_config: Callable[[str], Any] | None = None
+
+    def config_for(self, cell_name: str):
+        if self.cell_config is not None:
+            return self.cell_config(cell_name)
+        return self.config
+
+    def abstract_params(self, init_fn):
+        return jax.eval_shape(lambda k: init_fn(k, self.config),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# shared shape tables (from the assignment)
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(n=2708, e=10556, d_feat=1433, kind="train",
+                          regime="full"),
+    "minibatch_lg": dict(n_full=232965, e_full=114615892, batch_nodes=1024,
+                         fanout=(15, 10), d_feat=602, kind="train",
+                         regime="sampled"),
+    "ogb_products": dict(n=2449029, e=61859140, d_feat=100, kind="train",
+                         regime="full"),
+    "molecule": dict(n_per=30, e_per=64, batch=128, d_feat=16, kind="train",
+                     regime="batched"),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, n_candidates=1000000, kind="retrieval"),
+}
+
+
+def sampled_block_dims(batch_nodes: int, fanout) -> tuple[int, int]:
+    """(n_sub, e_sub) for a padded layered-fanout block."""
+    n = batch_nodes
+    layer = batch_nodes
+    e = 0
+    for f in fanout:
+        layer = layer * f
+        n += layer
+        e += layer
+    return n, e
+
+
+def lm_input_specs(cfg, cell_name: str) -> dict:
+    from repro.models.transformer import init_cache
+
+    s = LM_SHAPES[cell_name]
+    if s["kind"] == "train":
+        return {"tokens": sds((s["batch"], s["seq"])),
+                "labels": sds((s["batch"], s["seq"]))}
+    if s["kind"] == "prefill":
+        return {"tokens": sds((s["batch"], s["seq"]))}
+    # decode: 1 new token against a seq-length cache
+    cache = jax.eval_shape(lambda: init_cache(cfg, s["batch"], s["seq"]))
+    return {"tokens": sds((s["batch"], 1)), "cache": cache}
+
+
+def gnn_input_specs(arch: str, cfg, cell_name: str) -> dict:
+    s = GNN_SHAPES[cell_name]
+    if s["regime"] == "sampled":
+        n, e = sampled_block_dims(s["batch_nodes"], s["fanout"])
+        d_feat = s["d_feat"]
+        n_graphs = 1
+    elif s["regime"] == "batched":
+        n = s["n_per"] * s["batch"]
+        e = s["e_per"] * s["batch"]
+        d_feat = s["d_feat"]
+        n_graphs = s["batch"]
+    else:
+        n, e, d_feat = s["n"], s["e"], s["d_feat"]
+        n_graphs = 1
+    base = {"edge_src": sds((e,)), "edge_dst": sds((e,))}
+    if arch == "dimenet":
+        t = 8 * e  # capped triplet budget (DimeNet++-style)
+        base.update({
+            "z": sds((n,)),
+            "pos": sds((n, 3), jnp.float32),
+            "t_kj": sds((t,)),
+            "t_ji": sds((t,)),
+            "batch_seg": sds((n,)),
+            "targets": sds((n_graphs,), jnp.float32),
+        })
+    elif arch == "meshgraphnet":
+        base.update({
+            "x": sds((n, d_feat), jnp.float32),
+            "edge_attr": sds((e, 4), jnp.float32),
+            "targets": sds((n, 3), jnp.float32),
+        })
+    else:  # gcn / pna: node classification
+        base.update({
+            "x": sds((n, d_feat), jnp.float32),
+            "labels": sds((n,)),
+            "train_mask": sds((n,), jnp.bool_),
+        })
+    return base
+
+
+def recsys_input_specs(cfg, cell_name: str) -> dict:
+    s = RECSYS_SHAPES[cell_name]
+    b = s["batch"]
+    base = {
+        "dense": sds((b, cfg.n_dense), jnp.float32),
+        "sparse": sds((b, cfg.n_sparse, cfg.hotness)),
+    }
+    if s["kind"] == "train":
+        base["labels"] = sds((b,), jnp.float32)
+    if s["kind"] == "retrieval":
+        base["cand"] = sds((s["n_candidates"], cfg.embed_dim), jnp.float32)
+    return base

@@ -1,0 +1,19 @@
+"""dimenet [arXiv:2003.03123]: 6 interaction blocks, hidden 128, 8 bilinear,
+7 spherical × 6 radial basis functions; molecular energy regression."""
+
+import dataclasses
+
+from repro.configs.gnn_common import gnn_archdef
+from repro.models.gnn import dimenet
+
+CONFIG = dimenet.DimeNetConfig(
+    name="dimenet", n_blocks=6, d_hidden=128, n_bilinear=8, n_spherical=7,
+    n_radial=6)
+
+SMALL = dataclasses.replace(CONFIG, n_blocks=2, d_hidden=16, n_bilinear=2,
+                            n_spherical=3, n_radial=2)
+
+ARCH = gnn_archdef("dimenet", CONFIG, dimenet.loss_fn, SMALL,
+                   notes="triplet directional message passing "
+                         "[arXiv:2003.03123]; angular basis uses cos(lθ) "
+                         "family of the published rank (see DESIGN.md)")

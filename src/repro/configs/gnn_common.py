@@ -1,0 +1,71 @@
+"""Shared ArchDef builder + smoke-batch synthesis for the GNN family."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.common import GNN_SHAPES, ArchDef, Cell, gnn_input_specs
+
+
+def synth_graph_batch(arch: str, cfg, n: int, e: int, n_graphs: int = 1,
+                      seed: int = 0) -> dict:
+    """Small real batch with the family layout (smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    batch = {"edge_src": jnp.asarray(src), "edge_dst": jnp.asarray(dst)}
+    if arch == "dimenet":
+        t = min(4 * e, 512)
+        batch.update({
+            "z": jnp.asarray(rng.integers(0, cfg.n_atom_types, n), jnp.int32),
+            "pos": jnp.asarray(rng.normal(size=(n, 3)), jnp.float32),
+            "t_kj": jnp.asarray(rng.integers(0, e, t), jnp.int32),
+            "t_ji": jnp.asarray(rng.integers(0, e, t), jnp.int32),
+            "batch_seg": jnp.asarray(rng.integers(0, n_graphs, n), jnp.int32),
+            "targets": jnp.asarray(rng.normal(size=(n_graphs,)), jnp.float32),
+        })
+    elif arch == "meshgraphnet":
+        batch.update({
+            "x": jnp.asarray(rng.normal(size=(n, cfg.d_node_in)), jnp.float32),
+            "edge_attr": jnp.asarray(rng.normal(size=(e, cfg.d_edge_in)),
+                                     jnp.float32),
+            "targets": jnp.asarray(rng.normal(size=(n, cfg.d_out)),
+                                   jnp.float32),
+        })
+    else:
+        batch.update({
+            "x": jnp.asarray(rng.normal(size=(n, cfg.d_feat)), jnp.float32),
+            "labels": jnp.asarray(rng.integers(0, cfg.n_classes, n), jnp.int32),
+            "train_mask": jnp.asarray(rng.random(n) < 0.5),
+        })
+    return batch
+
+
+def gnn_archdef(arch_name: str, cfg, loss_fn, small_cfg, notes="") -> ArchDef:
+    cells = {name: Cell(name, meta["kind"], dict(meta))
+             for name, meta in GNN_SHAPES.items()}
+
+    def specs(cell_name: str):
+        return gnn_input_specs(arch_name, cfg, cell_name)
+
+    def smoke():
+        batch = synth_graph_batch(arch_name, small_cfg, n=40, e=120,
+                                  n_graphs=4)
+        return small_cfg, batch
+
+    def cell_config(cell_name: str):
+        """Input width follows the shape cell (d_feat differs per dataset)."""
+        s = GNN_SHAPES[cell_name]
+        d_feat = s.get("d_feat", 16)
+        if hasattr(cfg, "d_feat"):
+            return dataclasses.replace(cfg, d_feat=d_feat)
+        if hasattr(cfg, "d_node_in"):
+            return dataclasses.replace(cfg, d_node_in=d_feat)
+        return cfg  # dimenet: atom-type embeddings, no raw feature width
+
+    return ArchDef(name=arch_name, family="gnn", config=cfg, cells=cells,
+                   input_specs=specs, smoke=smoke, loss_fn=loss_fn,
+                   notes=notes, cell_config=cell_config)

@@ -1,0 +1,17 @@
+"""meshgraphnet [arXiv:2010.03409]: 15 message-passing layers, hidden 128,
+sum aggregation, 2-layer MLPs with LayerNorm; dynamics regression."""
+
+import dataclasses
+
+from repro.configs.gnn_common import gnn_archdef
+from repro.models.gnn import meshgraphnet as mgn
+
+CONFIG = mgn.MGNConfig(
+    name="meshgraphnet", n_layers=15, d_hidden=128, d_node_in=1433,
+    d_edge_in=4, d_out=3, mlp_layers=2)
+
+SMALL = dataclasses.replace(CONFIG, n_layers=3, d_hidden=16, d_node_in=12)
+
+ARCH = gnn_archdef("meshgraphnet", CONFIG, mgn.loss_fn, SMALL,
+                   notes="encode-process-decode mesh GNN [arXiv:2010.03409]; "
+                         "d_node_in follows the active shape cell")

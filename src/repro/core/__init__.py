@@ -1,0 +1,18 @@
+from repro.core.exec import DeviceGraph, ExecOpts, Executor, Result
+from repro.core.plan import ExecPlan, build_plan, choose_start_vertex
+from repro.core.query import QueryGraph, build_query_graph
+from repro.core.sparql_exec import QueryResult, SparqlEngine
+
+__all__ = [
+    "DeviceGraph",
+    "ExecOpts",
+    "Executor",
+    "Result",
+    "ExecPlan",
+    "build_plan",
+    "choose_start_vertex",
+    "QueryGraph",
+    "build_query_graph",
+    "QueryResult",
+    "SparqlEngine",
+]

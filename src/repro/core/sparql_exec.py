@@ -1,0 +1,413 @@
+"""Full SPARQL evaluation: BGP + OPTIONAL + FILTER + UNION (paper §5.1).
+
+Orchestrates the vectorized executor:
+
+- the required basic graph pattern runs first (one ExecPlan);
+- each OPTIONAL group becomes an *extension plan* left-joined onto the base
+  table: rows with ≥1 optional match take the matched rows, rows with none
+  keep the base bindings with nulls — the paper's all-or-nothing OPTIONAL
+  semantics realized as a group-level outer join (the nullify-and-keep-
+  searching + qualify-and-exclude-duplicate pair collapses into this join,
+  so no duplicate-exclusion pass is needed);
+- FILTERs: cheap single-variable numeric comparisons are pushed into the
+  expansion steps (inline), expensive ones (regex, var-var comparisons)
+  are applied to the final table (the paper's strategy);
+- UNION branches are evaluated independently and concatenated (SPARQL UNION
+  keeps duplicates, as the paper notes).
+"""
+
+from __future__ import annotations
+
+import re as _re
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.exec import ExecOpts, Executor, Result
+from repro.core.plan import ExecPlan, build_plan
+from repro.core.query import QueryGraph, build_query_graph
+from repro.rdf.sparql import (Comparison, GroupPattern, Literal, Regex,
+                              SelectQuery, Var, parse_sparql)
+from repro.rdf.transform import TransformMaps
+from repro.utils import get_logger
+
+log = get_logger("core.sparql")
+
+
+@dataclass
+class QueryResult:
+    variables: list[str]  # projected variable names (vertex vars + pvars)
+    rows: np.ndarray  # int32 [n, n_vars] vertex ids / edge-label ids / -1=null
+    kinds: list[str]  # per column: "vertex" | "predicate"
+    count: int = 0
+    stats: dict = field(default_factory=dict)
+
+    def decode(self, maps: TransformMaps, limit: int | None = None) -> list[dict]:
+        out = []
+        n = self.rows.shape[0] if limit is None else min(limit, self.rows.shape[0])
+        for i in range(n):
+            rec = {}
+            for c, var in enumerate(self.variables):
+                vid = int(self.rows[i, c])
+                if vid < 0:
+                    rec[var] = None
+                elif self.kinds[c] == "vertex":
+                    rec[var] = maps.dict.term(int(maps.vertex_to_term[vid]))
+                else:
+                    rec[var] = maps.dict.predicate(int(maps.elabel_to_pred[vid]))
+            out.append(rec)
+        return out
+
+
+class SparqlEngine:
+    """End-to-end SPARQL evaluation against one transformed graph."""
+
+    def __init__(self, graph, maps: TransformMaps, opts: ExecOpts | None = None,
+                 estimate: str = "sampled"):
+        self.graph = graph
+        self.maps = maps
+        self.opts = opts or ExecOpts()
+        self.estimate = estimate
+        self.executor = Executor(graph, self.opts)
+        self._plan_cache: dict[str, list] = {}
+
+    # ------------------------------------------------------------------ API
+    def query(self, sparql: str, collect: str = "bindings") -> QueryResult:
+        ast = parse_sparql(sparql)
+        return self.query_ast(ast, collect=collect)
+
+    def query_ast(self, ast: SelectQuery, collect: str = "bindings") -> QueryResult:
+        branches = self._expand_unions(ast.where)
+        all_rows: list[np.ndarray] = []
+        variables: list[str] | None = None
+        kinds: list[str] | None = None
+        total = 0
+        for branch in branches:
+            res, q, vrs, knd = self._eval_group(branch, ast.select)
+            if variables is None:
+                variables, kinds = vrs, knd
+            total += res.shape[0]
+            # align columns across branches (UNION branches may differ)
+            if vrs != variables:
+                res = _align_columns(res, vrs, variables)
+            all_rows.append(res)
+        rows = np.concatenate(all_rows) if all_rows else np.zeros((0, 0), np.int32)
+        return QueryResult(variables or [], rows, kinds or [], count=int(rows.shape[0]))
+
+    def count(self, sparql: str) -> int:
+        return self.query(sparql).count
+
+    # ----------------------------------------------------------- internals
+    def _expand_unions(self, g: GroupPattern) -> list[GroupPattern]:
+        """Cartesian expansion of UNION blocks into flat branch groups."""
+        branches = [GroupPattern(list(g.triples), list(g.filters),
+                                 list(g.optionals), [])]
+        for union in g.unions:
+            new: list[GroupPattern] = []
+            for b in branches:
+                for alt in union:
+                    for alt_flat in self._expand_unions(alt):
+                        nb = GroupPattern(
+                            b.triples + alt_flat.triples,
+                            b.filters + alt_flat.filters,
+                            b.optionals + alt_flat.optionals,
+                            [],
+                        )
+                        new.append(nb)
+            branches = new
+        return branches
+
+    def _eval_group(self, g: GroupPattern, select: list[str]):
+        q = build_query_graph(g.triples, self.maps)
+        cheap, expensive = _split_filters(g.filters, q)
+        plan = build_plan(self.graph, q, estimate=self.estimate,
+                          num_filters=cheap,
+                          use_nlf=self.opts.use_nlf, use_deg=self.opts.use_deg)
+        res = self.executor.run(plan)
+        table = res.bindings
+        ptable = res.pvar_bindings
+        # expensive filters on the base table
+        table, ptable = self._apply_expensive(table, ptable, q, expensive)
+
+        # OPTIONAL groups: group-level left join
+        col_offset: dict[str, int] = {}
+        q_all = q
+        for og in g.optionals:
+            table, ptable, q_all = self._left_join(table, ptable, q_all, og)
+
+        # projection
+        variables: list[str] = []
+        kinds: list[str] = []
+        cols: list[np.ndarray] = []
+        want = select or [v for v in q_all.var_to_vertex] + q_all.pvars
+        for var in want:
+            if var in q_all.var_to_vertex:
+                variables.append(var)
+                kinds.append("vertex")
+                cols.append(table[:, q_all.var_to_vertex[var]])
+            elif var in q_all.pvars:
+                variables.append(var)
+                kinds.append("predicate")
+                cols.append(ptable[:, q_all.pvars.index(var)])
+            else:
+                variables.append(var)
+                kinds.append("vertex")
+                cols.append(np.full(table.shape[0], -1, np.int32))
+        rows = np.stack(cols, axis=1) if cols else np.zeros((table.shape[0], 0),
+                                                            np.int32)
+        return rows, q_all, variables, kinds
+
+    def _left_join(self, table: np.ndarray, ptable: np.ndarray,
+                   q_base: QueryGraph, og: GroupPattern):
+        """Left-outer join an OPTIONAL group onto the current table."""
+        # Build a combined query graph: base vars are *seeds* (shared vars
+        # join on them), new vars extend.
+        combined = _merge_query(q_base, og.triples, self.maps)
+        q_ext, new_vertex_map, base_cols = combined
+        cheap, expensive = _split_filters(og.filters, q_ext)
+        # extension plan: steps that bind the new vertices starting from rows
+        plan = _extension_plan(self.graph, q_ext, base_cols, cheap, self.opts,
+                               self.estimate)
+        nq_ext = q_ext.n_vertices
+        b0 = np.full((table.shape[0], nq_ext), -1, dtype=np.int32)
+        b0[:, : table.shape[1]] = table
+        p0 = np.full((table.shape[0], max(1, len(q_ext.pvars))), -1, np.int32)
+        p0[:, : ptable.shape[1]] = ptable
+        org0 = np.arange(table.shape[0], dtype=np.int32)
+        if plan.unsat or table.shape[0] == 0:
+            matched = Result(0, np.zeros((0, nq_ext), np.int32),
+                             np.zeros((0, max(1, len(q_ext.pvars))), np.int32),
+                             np.zeros(0, np.int32))
+        else:
+            matched = self.executor.run(plan, initial=(b0, p0, org0))
+        mt, mp = self._apply_expensive(matched.bindings, matched.pvar_bindings,
+                                       q_ext, expensive,
+                                       origins=matched.origins)
+        morg = mt[1]
+        mt, mp = mt[0], mp
+        # rows with no optional match: keep base + nulls
+        has_match = np.zeros(table.shape[0], dtype=bool)
+        if morg.shape[0]:
+            has_match[morg] = True
+        unmatched = np.flatnonzero(~has_match)
+        un_b = np.full((unmatched.shape[0], nq_ext), -1, dtype=np.int32)
+        un_b[:, : table.shape[1]] = table[unmatched]
+        un_p = np.full((unmatched.shape[0], mp.shape[1]), -1, np.int32)
+        un_p[:, : ptable.shape[1]] = ptable[unmatched]
+        new_table = np.concatenate([mt, un_b], axis=0)
+        new_ptable = np.concatenate([mp, un_p], axis=0)
+        return new_table, new_ptable, q_ext
+
+    def _apply_expensive(self, table, ptable, q: QueryGraph, filters,
+                         origins=None):
+        keep = np.ones(table.shape[0], dtype=bool)
+        g = self.graph
+        for f in filters:
+            if isinstance(f, Regex):
+                col = q.var_to_vertex.get(f.var.name)
+                if col is None:
+                    continue
+                pat = _re.compile(f.pattern)
+                vals = table[:, col]
+                km = np.zeros(table.shape[0], dtype=bool)
+                for i, v in enumerate(vals):
+                    if v >= 0:
+                        term = self.maps.dict.term(int(self.maps.vertex_to_term[v]))
+                        km[i] = bool(pat.search(term.strip('"')))
+                keep &= km
+            elif isinstance(f, Comparison):
+                lv = _col_values(f.lhs, table, q, g)
+                rv = _col_values(f.rhs, table, q, g)
+                if lv is None or rv is None:
+                    continue
+                from repro.core.plan import _np_cmp
+
+                with np.errstate(invalid="ignore"):
+                    keep &= _np_cmp(lv - rv + 0.0, f.op, 0.0) if np.ndim(rv) else \
+                        _np_cmp(lv, f.op, float(rv))
+        table = table[keep]
+        ptable = ptable[keep]
+        if origins is not None:
+            return (table, origins[keep]), ptable
+        return table, ptable
+
+
+# --------------------------------------------------------------------------
+
+
+def _col_values(term, table, q: QueryGraph, g):
+    if isinstance(term, Var):
+        col = q.var_to_vertex.get(term.name)
+        if col is None or g.numeric_value is None:
+            return None
+        ids = np.clip(table[:, col], 0, g.n_vertices - 1)
+        vals = g.numeric_value[ids].copy()
+        vals[table[:, col] < 0] = np.nan
+        return vals
+    if isinstance(term, Literal) and term.numeric is not None:
+        return term.numeric
+    return None
+
+
+def _split_filters(filters, q: QueryGraph):
+    """cheap: {var: [(op, const)]} pushed inline; expensive: post-hoc list."""
+    cheap: dict[str, list[tuple[str, float]]] = {}
+    expensive = []
+    for f in filters:
+        if (isinstance(f, Comparison) and isinstance(f.lhs, Var)
+                and isinstance(f.rhs, Literal) and f.rhs.numeric is not None):
+            cheap.setdefault(f.lhs.name, []).append((f.op, f.rhs.numeric))
+        elif (isinstance(f, Comparison) and isinstance(f.rhs, Var)
+              and isinstance(f.lhs, Literal) and f.lhs.numeric is not None):
+            flipped = {"<": ">", "<=": ">=", ">": "<", ">=": "<=",
+                       "=": "=", "!=": "!="}[f.op]
+            cheap.setdefault(f.rhs.name, []).append((flipped, f.lhs.numeric))
+        else:
+            expensive.append(f)
+    return cheap, expensive
+
+
+def _merge_query(q_base: QueryGraph, opt_triples, maps):
+    """Extend a base query graph with OPTIONAL triples; base vertices keep
+    their column indices, new vertices append."""
+    from repro.core.query import build_query_graph as _bqg
+
+    # Build combined graph over base + optional triples by rebuilding with
+    # the base's variable order fixed first.
+    q_ext = QueryGraph()
+    q_ext.vertices = [  # copy base vertices
+        type(v)(var=v.var, labels=v.labels, bound_id=v.bound_id, term=v.term)
+        for v in q_base.vertices
+    ]
+    q_ext.var_to_vertex = dict(q_base.var_to_vertex)
+    q_ext.pvars = list(q_base.pvars)
+    q_ext.unsat = q_base.unsat
+    # note: base edges already satisfied; extension plan only needs new edges
+    tmp = _bqg(opt_triples, maps)
+    # remap tmp vertices into q_ext
+    remap: dict[int, int] = {}
+    for ti, tv in enumerate(tmp.vertices):
+        if tv.var is not None and tv.var in q_ext.var_to_vertex:
+            idx = q_ext.var_to_vertex[tv.var]
+            # merge labels onto the existing vertex (type triples in OPTIONAL)
+            merged = tuple(sorted({*q_ext.vertices[idx].labels, *tv.labels}))
+            q_ext.vertices[idx].labels = merged
+        else:
+            idx = len(q_ext.vertices)
+            q_ext.vertices.append(
+                type(tv)(var=tv.var, labels=tv.labels, bound_id=tv.bound_id,
+                         term=tv.term))
+            if tv.var is not None:
+                q_ext.var_to_vertex[tv.var] = idx
+        remap[ti] = idx
+    new_edges = []
+    for e in tmp.edges:
+        pv = e.pvar
+        if pv is not None and pv not in q_ext.pvars:
+            q_ext.pvars.append(pv)
+        new_edges.append(type(e)(remap[e.u], remap[e.v], e.elabel, pv))
+    q_ext.edges = new_edges  # ONLY the optional edges (extension steps)
+    q_ext.unsat = q_ext.unsat or tmp.unsat
+    base_cols = q_base.n_vertices
+    return q_ext, remap, base_cols
+
+
+def _extension_plan(graph, q_ext: QueryGraph, base_cols: int, cheap, opts,
+                    estimate) -> ExecPlan:
+    """Plan binding the new vertices of q_ext, starting from bound base rows.
+
+    Builds a standard plan but marks base vertices as pre-bound: expansion
+    steps are emitted only for vertices >= base_cols (or base vertices that
+    gained labels are re-checked via a filter step).
+    """
+    from repro.core.plan import ExecPlan, NTCheck, PlanError, Step, _nlf_masks
+
+    placed = set(range(base_cols))
+    steps: list[Step] = []
+    order = list(range(base_cols))
+    edges = list(q_ext.edges)
+    edge_used = [False] * len(edges)
+    remaining = {i for i in range(len(q_ext.vertices)) if i >= base_cols}
+    est_fanout: list[float] = []
+    # greedy: repeatedly bind a new vertex adjacent to placed set
+    guard = 0
+    while remaining and guard < 1000:
+        guard += 1
+        progress = False
+        for ei, e in enumerate(edges):
+            if edge_used[ei]:
+                continue
+            u_in, v_in = e.u in placed, e.v in placed
+            if u_in and v_in:
+                continue  # becomes a non-tree check later
+            if not (u_in or v_in):
+                continue
+            w = e.v if u_in else e.u
+            parent = e.u if u_in else e.v
+            forward = e.u == parent
+            edge_used[ei] = True
+            nts: list[NTCheck] = []
+            for ei2, e2 in enumerate(edges):
+                if edge_used[ei2]:
+                    continue
+                if e2.u == e2.v == w:
+                    edge_used[ei2] = True
+                    nts.append(NTCheck(w, e2.elabel, True,
+                                       _pvar(q_ext, e2), self_loop=True))
+                elif {e2.u, e2.v} <= placed | {w} and w in (e2.u, e2.v):
+                    edge_used[ei2] = True
+                    other = e2.u if e2.v == w else e2.v
+                    nts.append(NTCheck(other, e2.elabel, e2.u == other,
+                                       _pvar(q_ext, e2)))
+            qv = q_ext.vertices[w]
+            steps.append(Step(
+                u=w, parent=parent, elabel=e.elabel, forward=forward,
+                pvar_idx=_pvar(q_ext, e), labels=qv.labels,
+                bound_id=max(qv.bound_id, -1), nontree=tuple(nts),
+                num_filters=tuple(cheap.get(qv.var or "", ()))))
+            est_fanout.append(4.0)
+            placed.add(w)
+            order.append(w)
+            remaining.discard(w)
+            progress = True
+            break
+        if not progress:
+            break
+    if remaining:
+        raise PlanError("OPTIONAL pattern not connected to the base pattern")
+    # leftover edges between placed vertices -> non-tree checks on last step
+    for ei, e in enumerate(edges):
+        if edge_used[ei]:
+            continue
+        later = max(order.index(e.u), order.index(e.v))
+        w = order[later]
+        attached = False
+        for st in steps:
+            if st.u == w:
+                other = e.u if e.v == w else e.v
+                st.nontree = (*st.nontree,
+                              NTCheck(other, e.elabel, e.u == other,
+                                      _pvar(q_ext, e)))
+                attached = True
+                break
+        if not attached:
+            raise PlanError("optional edge between two pre-bound vertices "
+                            "unsupported; move it into the base pattern")
+        edge_used[ei] = True
+    plan = ExecPlan(
+        query=q_ext, start_vertex=0,
+        start_candidates=np.zeros(0, np.int32), steps=steps,
+        order=order, n_pvars=len(q_ext.pvars), est_fanout=est_fanout)
+    return plan
+
+
+def _pvar(q: QueryGraph, e) -> int:
+    return q.pvars.index(e.pvar) if e.pvar is not None else -1
+
+
+def _align_columns(rows: np.ndarray, have: list[str], want: list[str]):
+    out = np.full((rows.shape[0], len(want)), -1, dtype=np.int32)
+    for i, var in enumerate(want):
+        if var in have:
+            out[:, i] = rows[:, have.index(var)]
+    return out

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the engine's compute hot-spots.
+
+The paper's profiling singles out ExploreCandidateRegion and SubgraphSearch
+(IsJoinable in particular) as the dominating costs; the corresponding
+vectorized primitives get kernels here:
+
+- ``edge_exists``       — batched binary search over CSR slices (IsJoinable)
+- ``sorted_intersect``  — tiled compare-all membership (+INT, VPU-shaped)
+- ``bitmap_filter``     — packed-bitmap superset probes (label / NLF filters)
+- ``segment_gather``    — fused gather + segment-sum (EmbeddingBag / GNN
+                          aggregation; shared with the model zoo)
+
+Every kernel has a pure-jnp oracle in ``ref.py``; ``ops.py`` dispatches by
+backend (Pallas on TPU, interpret mode for CPU validation, jnp otherwise).
+"""
+
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,49 @@
+"""Label / NLF filter kernel: packed-bitmap superset probe.
+
+The two-attribute vertex model stores L(v) as packed uint32 words; a filter
+probe is ``(bitmap[v] & required) == required`` over all words.  One VPU
+pass per row tile: the word dimension (≤ a few words for real ontologies)
+is reduced in registers.
+
+bitmap: uint32 [B, W], required: uint32 [W] → bool [B].
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(bm_ref, req_ref, o_ref):
+    bm = bm_ref[...]  # [TB, W]
+    req = req_ref[...]  # [1, W]
+    o_ref[...] = jnp.all((bm & req) == req, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("interpret", "tile"))
+def bitmap_superset_pallas(
+    bitmap: jax.Array, required: jax.Array, *, interpret: bool = False,
+    tile: int = 1024
+) -> jax.Array:
+    b, w = bitmap.shape
+    t = min(tile, max(1, b))
+    pad = (-b) % t
+    if pad:
+        bitmap = jnp.pad(bitmap, ((0, pad), (0, 0)))
+    bp = bitmap.shape[0]
+    req2 = required.reshape(1, w)
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.bool_),
+        grid=(bp // t,),
+        in_specs=[
+            pl.BlockSpec((t, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        interpret=interpret,
+    )(bitmap, req2)
+    return out[:b]

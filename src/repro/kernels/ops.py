@@ -1,0 +1,83 @@
+"""Dispatch layer: Pallas TPU kernels on TPU, jnp oracles elsewhere.
+
+``REPRO_KERNELS`` env var forces a backend: ``ref`` (pure jnp),
+``pallas_interpret`` (Pallas kernels in interpret mode — used by the kernel
+test suite on CPU), ``pallas`` (compiled, TPU).  Default: ``pallas`` on TPU
+backends, ``ref`` otherwise.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import lru_cache
+
+import jax
+
+from repro.kernels import ref as _ref
+
+
+@lru_cache(maxsize=1)
+def backend() -> str:
+    forced = os.environ.get("REPRO_KERNELS")
+    if forced:
+        return forced
+    try:
+        platform = jax.default_backend()
+    except Exception:
+        platform = "cpu"
+    return "pallas" if platform == "tpu" else "ref"
+
+
+def _use_pallas() -> bool:
+    return backend() in ("pallas", "pallas_interpret")
+
+
+def _interpret() -> bool:
+    return backend() == "pallas_interpret" or (
+        backend() == "pallas" and jax.default_backend() != "tpu"
+    )
+
+
+# --------------------------------------------------------------------------
+
+
+def edge_exists(nbr, lo, hi, target, n_iters: int = 32):
+    if _use_pallas():
+        from repro.kernels.edge_exists import edge_exists_pallas
+
+        return edge_exists_pallas(nbr, lo, hi, target, n_iters=n_iters,
+                                  interpret=_interpret())
+    return _ref.edge_exists_ref(nbr, lo, hi, target, n_iters=n_iters)
+
+
+def tile_membership(a, b):
+    if _use_pallas():
+        from repro.kernels.sorted_intersect import tile_membership_pallas
+
+        return tile_membership_pallas(a, b, interpret=_interpret())
+    return _ref.tile_membership_ref(a, b)
+
+
+def bitmap_superset(bitmap, required):
+    if _use_pallas():
+        from repro.kernels.bitmap_filter import bitmap_superset_pallas
+
+        return bitmap_superset_pallas(bitmap, required, interpret=_interpret())
+    return _ref.bitmap_superset_ref(bitmap, required)
+
+
+def segment_gather_sum(table, indices, segments, num_segments, weights=None):
+    if _use_pallas():
+        from repro.kernels.segment_gather import segment_gather_sum_pallas
+
+        return segment_gather_sum_pallas(
+            table, indices, segments, num_segments, weights=weights,
+            interpret=_interpret(),
+        )
+    return _ref.segment_gather_sum_ref(table, indices, segments, num_segments,
+                                       weights=weights)
+
+
+def ragged_expand(offsets, degrees, capacity: int):
+    # pure-jnp always: the searchsorted lowers well on all backends
+    return _ref.ragged_expand_ref(offsets, degrees, capacity)

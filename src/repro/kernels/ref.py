@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: each Pallas kernel's test sweeps shapes
+and dtypes asserting allclose against the function here.  The executor can
+run entirely on these (``REPRO_KERNELS=ref``), which is also the path used
+on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_exists_ref(
+    nbr: jax.Array,  # int32 [m]    sorted adjacency (per (el) block, per-src runs)
+    lo: jax.Array,  # int32 [B]    per-query slice start
+    hi: jax.Array,  # int32 [B]    per-query slice end (exclusive)
+    target: jax.Array,  # int32 [B]
+    n_iters: int = 32,
+) -> jax.Array:
+    """Batched lower-bound binary search: target ∈ nbr[lo:hi)?  bool [B].
+
+    This is the paper's original IsJoinable membership probe,
+    O(log deg) per (candidate, non-tree edge) pair.
+    """
+    m = max(1, nbr.shape[0])
+
+    def body(_, state):
+        lo_, hi_ = state
+        mid = (lo_ + hi_) >> 1
+        v = nbr[jnp.clip(mid, 0, m - 1)]
+        go_right = v < target
+        return jnp.where(go_right, mid + 1, lo_), jnp.where(go_right, hi_, mid)
+
+    lo0 = lo.astype(jnp.int32)
+    hi0 = hi.astype(jnp.int32)
+    lo_f, _ = jax.lax.fori_loop(0, n_iters, body, (lo0, hi0))
+    found = (lo_f < hi0) & (nbr[jnp.clip(lo_f, 0, m - 1)] == target)
+    return found & (lo0 < hi0)
+
+
+def tile_membership_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Per-row compare-all membership: out[i, j] = a[i, j] ∈ b[i, :].
+
+    a: int32 [R, TA] candidate tiles (padded with -1)
+    b: int32 [R, TB] adjacency tiles (padded with -1)
+    This is the +INT bulk-join primitive reshaped for the VPU: rather than a
+    sequential sorted-merge (CPU-optimal), a TPU does the O(TA·TB) compare-all
+    inside VMEM, which vectorizes perfectly for the tile sizes the executor
+    uses.
+    """
+    eq = a[:, :, None] == b[:, None, :]
+    return jnp.any(eq & (a[:, :, None] >= 0), axis=-1)
+
+
+def bitmap_superset_ref(bitmap: jax.Array, required: jax.Array) -> jax.Array:
+    """Row-wise superset test on packed uint32 bitmaps.
+
+    bitmap: uint32 [B, W] per-candidate label (or NLF neighbor-type) words
+    required: uint32 [W] the query-side mask
+    returns bool [B]: (bitmap & required) == required for every word.
+    """
+    req = required[None, :]
+    return jnp.all((bitmap & req) == req, axis=-1)
+
+
+def segment_gather_sum_ref(
+    table: jax.Array,  # [V, D] embedding rows / node features
+    indices: jax.Array,  # int32 [E] gather ids
+    segments: jax.Array,  # int32 [E] destination segment per gathered row
+    num_segments: int,
+    weights: jax.Array | None = None,  # optional [E]
+) -> jax.Array:
+    """Fused gather + segment-sum (EmbeddingBag-sum / GNN aggregate oracle)."""
+    rows = table[indices]
+    if weights is not None:
+        rows = rows * weights[:, None]
+    return jax.ops.segment_sum(rows, segments, num_segments=num_segments)
+
+
+def ragged_expand_ref(
+    offsets: jax.Array,  # int32 [R] exclusive cumsum of per-row degrees
+    degrees: jax.Array,  # int32 [R]
+    capacity: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Flatten ragged per-row ranges into output slots.
+
+    Returns (row, j, valid) each [capacity]: slot k belongs to input row
+    ``row[k]`` at within-row position ``j[k]``; slots beyond the total are
+    invalid.  This is the executor's expansion primitive.
+    """
+    total = jnp.sum(degrees)
+    k = jnp.arange(capacity, dtype=jnp.int32)
+    row = jnp.searchsorted(offsets, k, side="right").astype(jnp.int32) - 1
+    row = jnp.clip(row, 0, max(1, offsets.shape[0]) - 1)
+    j = k - offsets[row]
+    valid = (k < total) & (j < degrees[row]) & (j >= 0)
+    return row, j, valid

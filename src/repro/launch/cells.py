@@ -1,0 +1,216 @@
+"""Cell builders: (arch × shape × mesh) → jittable step + abstract args +
+shardings.  Shared by the dry-run launcher, the roofline analyzer, and the
+benchmarks."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.sharding.specs import batch_specs, opt_state_specs, param_specs
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.trainstep import make_train_step
+from repro.utils import get_logger
+
+log = get_logger("launch.cells")
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def build_cell(arch_name: str, cell_name: str, mesh,
+               opt_cfg: OptConfig | None = None,
+               lm_depth: tuple[int, int] | None = None,
+               profile: str = "baseline") -> dict[str, Any]:
+    """Returns dict(step=jitted fn, args=abstract arg pytree).
+
+    ``jax.jit(step, in_shardings=...)`` is already applied; call
+    ``out["step"].lower(*out["args"])`` to lower.
+
+    ``lm_depth=(n_dense_layers, n_moe_layers)``: depth override used by the
+    roofline analyzer to undo XLA's count-scan-body-once cost accounting
+    via depth differencing (see analysis/roofline.py).
+
+    ``profile``: sharding/optimization profile (the §Perf hillclimb knobs):
+      LM:  "baseline"       activations model-sharded between blocks
+           "act_replicated" Megatron-style: activations replicated across
+                            `model`, one all-reduce per row-parallel matmul
+           "act_seq"        sequence-parallel flavor: activations sharded on
+                            the sequence dim between blocks
+      GNN: "baseline"       GSPMD auto-partitioning of the edge scatter
+           "shard_map"      explicit SPMD: local segment_sum + psum
+    """
+    arch = get_arch(arch_name)
+    opt_cfg = opt_cfg or OptConfig()
+
+    if arch.family == "engine":
+        from repro.core.distributed import lower_engine_cell
+
+        meta = arch.cells[cell_name].meta
+        return {
+            "lower": lambda: lower_engine_cell(
+                mesh, arch.config, meta, multi_pod="pod" in mesh.axis_names),
+            "family": "engine",
+        }
+
+    cfg = arch.config_for(cell_name)
+    cell = arch.cells[cell_name]
+    batch_abs = arch.input_specs(cell_name)
+
+    if arch.family == "lm":
+        from repro.configs.common import lm_input_specs
+        from repro.models import transformer
+
+        # activation sharding hints follow the mesh + profile
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+        # profile grammar: <act_mode>[+bf16logits][+dots]
+        parts = profile.split("+")
+        act_specs = {
+            "baseline": P(dp, None, "model"),
+            "act_replicated": P(dp, None, None),
+            "act_seq": P(dp, "model", None),
+        }
+        cfg = dataclasses.replace(
+            cfg, act_spec=act_specs[parts[0]],
+            logits_spec=P(dp, None, "model"),
+            attn_fp32_logits="bf16logits" not in parts,
+            remat="noremat" not in parts,
+            remat_policy="dots" if "dots" in parts else "full")
+        if lm_depth is not None:
+            nd, nm = lm_depth
+            moe = cfg.moe
+            if moe is not None:
+                moe = dataclasses.replace(moe, first_dense_layers=nd)
+            # unroll_layers: scan trip count is invisible to HloCostAnalysis,
+            # so the analyzer's depth variants must be python-unrolled
+            cfg = dataclasses.replace(cfg, n_layers=nd + nm, moe=moe,
+                                      unroll_layers=True)
+            batch_abs = lm_input_specs(cfg, cell_name)
+        params_abs = jax.eval_shape(
+            lambda k: transformer.init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        pspecs = param_specs(params_abs, "lm", mesh)
+        psh = _named(mesh, pspecs)
+        bspec = batch_specs("lm", cell.kind, batch_abs, mesh)
+        bsh = _named(mesh, bspec)
+
+        if cell.kind == "train":
+            opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg),
+                                     params_abs)
+            osh = _named(mesh, opt_state_specs(pspecs, opt_abs))
+            raw = make_train_step(transformer.loss_fn, cfg, opt_cfg)
+            step = jax.jit(raw, in_shardings=(psh, osh, bsh),
+                           out_shardings=(psh, osh, None), donate_argnums=(0, 1))
+            return {"step": step, "args": (params_abs, opt_abs, batch_abs),
+                    "family": "lm", "cfg": cfg}
+        if cell.kind == "prefill":
+            def prefill(params, batch):
+                logits, _ = transformer.forward(params, batch["tokens"], cfg)
+                return logits
+
+            step = jax.jit(prefill, in_shardings=(psh, bsh))
+            return {"step": step, "args": (params_abs, batch_abs),
+                    "family": "lm", "cfg": cfg}
+        # decode
+        cache_abs = batch_abs.pop("cache")
+        csh = _named(mesh, batch_specs("lm", "decode", cache_abs, mesh))
+        tsh = _named(mesh, batch_specs("lm", "decode", batch_abs, mesh))
+
+        def decode(params, cache, batch):
+            return transformer.decode_step(params, cache, batch["tokens"], cfg)
+
+        step = jax.jit(decode, in_shardings=(psh, csh, tsh),
+                       out_shardings=(None, csh), donate_argnums=(1,))
+        return {"step": step, "args": (params_abs, cache_abs, batch_abs),
+                "family": "lm", "cfg": cfg}
+
+    if arch.family == "gnn":
+        from repro.models.gnn import dimenet, gcn, meshgraphnet, pna
+
+        mod = {"dimenet": dimenet, "gcn-cora": gcn,
+               "meshgraphnet": meshgraphnet, "pna": pna}[arch_name]
+        if profile in ("shard_map", "shard_map_v2"):
+            from repro.sharding.gnn_spmd import (make_spmd_train_step,
+                                                 n_shards_of,
+                                                 pad_gnn_batch_abstract)
+
+            ns = n_shards_of(mesh)
+            n_seg = batch_abs["edge_src"].shape[0] if arch_name == "dimenet" \
+                else (batch_abs["x"].shape[0] if "x" in batch_abs
+                      else batch_abs["pos"].shape[0])
+            v2 = profile == "shard_map_v2"
+            fields = ["t_kj", "t_ji", "edge_src", "edge_dst"] if v2 else None
+            batch_abs = pad_gnn_batch_abstract(arch_name, batch_abs, ns, n_seg)
+            if v2:
+                # edge arrays must also divide the shard count
+                for f in ("edge_src", "edge_dst"):
+                    x = batch_abs[f]
+                    pad = (-x.shape[0]) % ns
+                    if pad:
+                        batch_abs[f] = jax.ShapeDtypeStruct(
+                            (x.shape[0] + pad,), x.dtype)
+            wrap, cfg2 = make_spmd_train_step(arch_name, mod, cfg, opt_cfg,
+                                              mesh, edge_sharded=v2)
+            params_abs = jax.eval_shape(
+                lambda k: mod.init_params(k, cfg2),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg),
+                                     params_abs)
+            step = wrap(params_abs, opt_abs, batch_abs)
+            return {"step": step, "args": (params_abs, opt_abs, batch_abs),
+                    "family": "gnn", "cfg": cfg2}
+        params_abs = jax.eval_shape(
+            lambda k: mod.init_params(k, cfg),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        pspecs = param_specs(params_abs, "gnn", mesh)
+        psh = _named(mesh, pspecs)
+        bsh = _named(mesh, batch_specs("gnn", cell.kind, batch_abs, mesh))
+        opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_abs)
+        osh = _named(mesh, opt_state_specs(pspecs, opt_abs))
+        raw = make_train_step(mod.loss_fn, cfg, opt_cfg)
+        step = jax.jit(raw, in_shardings=(psh, osh, bsh),
+                       out_shardings=(psh, osh, None), donate_argnums=(0, 1))
+        return {"step": step, "args": (params_abs, opt_abs, batch_abs),
+                "family": "gnn", "cfg": cfg}
+
+    # recsys
+    from repro.models.recsys import dlrm
+
+    params_abs = jax.eval_shape(
+        lambda k: dlrm.init_params(k, cfg), jax.ShapeDtypeStruct((2,),
+                                                                 jnp.uint32))
+    pspecs = param_specs(params_abs, "recsys", mesh)
+    psh = _named(mesh, pspecs)
+    bsh = _named(mesh, batch_specs("recsys", cell.kind, batch_abs, mesh))
+    if cell.kind == "train":
+        opt_abs = jax.eval_shape(lambda p: adamw_init(p, opt_cfg), params_abs)
+        osh = _named(mesh, opt_state_specs(pspecs, opt_abs))
+        raw = make_train_step(dlrm.loss_fn, cfg, opt_cfg)
+        step = jax.jit(raw, in_shardings=(psh, osh, bsh),
+                       out_shardings=(psh, osh, None), donate_argnums=(0, 1))
+        return {"step": step, "args": (params_abs, opt_abs, batch_abs),
+                "family": "recsys", "cfg": cfg}
+    if cell.kind == "retrieval":
+        step = jax.jit(lambda p, b: dlrm.retrieval_score(p, b, cfg),
+                       in_shardings=(psh, bsh))
+    else:  # serve
+        step = jax.jit(lambda p, b: dlrm.forward(p, b, cfg),
+                       in_shardings=(psh, bsh))
+    return {"step": step, "args": (params_abs, batch_abs),
+            "family": "recsys", "cfg": cfg}

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import to build these meshes on the CPU container.
+
+Axis semantics:
+  pod    — inter-pod data parallelism (and the pipeline axis when PP is on)
+  data   — within-pod data parallelism + ZeRO sharding of params/optimizer
+  model  — tensor/expert parallelism (and sequence parallelism for long
+           activations)
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(model_parallelism: int = 16, devices=None):
+    """Elastic variant: whatever devices are alive, shaped (data, model).
+
+    Used by checkpoint-restore after a topology change: data-parallel size
+    follows the live device count (model parallelism is fixed by the
+    parameter sharding layout).
+    """
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    model = min(model_parallelism, n)
+    while n % model:
+        model -= 1
+    data = n // model
+    dev_array = np.asarray(devices).reshape(data, model)
+    return jax.sharding.Mesh(dev_array, ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (pod folds into data parallelism)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

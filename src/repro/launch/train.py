@@ -1,0 +1,113 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [options]``.
+
+Builds the arch's model (reduced or full), the data stream, sharded train
+step (when >1 device), and runs the fault-tolerant loop with checkpointing.
+The CPU container trains reduced configs (see --preset smoke); the same
+driver lowers the full configs on a real fleet.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.train.data import RecsysStream, SampledGraphStream, TokenStream
+from repro.train.loop import LoopConfig, Trainer
+from repro.train.optimizer import OptConfig, adamw_init
+from repro.train.trainstep import make_train_step
+from repro.utils import get_logger
+
+log = get_logger("launch.train")
+
+
+def _stream_for(arch, cfg, batch_example, args):
+    if arch.family == "lm":
+        b, s = batch_example["tokens"].shape
+        return TokenStream(vocab=cfg.vocab, batch=args.batch or b,
+                           seq=args.seq or s, seed=args.seed)
+    if arch.family == "recsys":
+        return RecsysStream(n_dense=cfg.n_dense, n_sparse=cfg.n_sparse,
+                            hotness=cfg.hotness,
+                            vocab_sizes=cfg.vocab_sizes,
+                            batch=args.batch or 64, seed=args.seed)
+    # gnn: sampled stream over a synthetic graph
+    d_feat = getattr(cfg, "d_feat", getattr(cfg, "d_node_in", 16))
+    n_classes = getattr(cfg, "n_classes", 4)
+    return SampledGraphStream(n_nodes=5000, avg_degree=8, d_feat=d_feat,
+                              n_classes=n_classes,
+                              batch_nodes=args.batch or 64, fanout=[5, 3],
+                              seed=args.seed)
+
+
+def _init_for(arch, cfg, key):
+    if arch.family == "lm":
+        from repro.models import transformer
+
+        return transformer.init_params(key, cfg)
+    if arch.family == "recsys":
+        from repro.models.recsys import dlrm
+
+        return dlrm.init_params(key, cfg)
+    from repro.models.gnn import dimenet, gcn, meshgraphnet, pna
+
+    mod = {"dimenet": dimenet, "gcn-cora": gcn, "meshgraphnet": meshgraphnet,
+           "pna": pna}[arch.name]
+    return mod.init_params(key, cfg)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress", action="store_true")
+    ap.add_argument("--ckpt-dir", default="runs/train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = get_arch(args.arch)
+    if arch.family == "engine":
+        raise SystemExit("use repro.launch.serve for the engine")
+    if args.preset == "smoke":
+        cfg, batch_example = arch.smoke()
+        if arch.family == "gnn":
+            # sampled stream layout (node features, not molecule layout)
+            if args.arch in ("dimenet", "meshgraphnet"):
+                raise SystemExit(
+                    f"{args.arch} smoke training uses the molecule layout; "
+                    "run examples/gnn_training.py instead")
+    else:
+        cfg, batch_example = arch.config, None
+    params = _init_for(arch, cfg, jax.random.PRNGKey(args.seed))
+    n_params = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    log.info("arch=%s params=%.3fM", args.arch, n_params / 1e6)
+
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps,
+                        grad_compress=args.grad_compress)
+    opt_state = adamw_init(params, opt_cfg)
+    stream = _stream_for(arch, cfg, batch_example, args)
+    step = jax.jit(make_train_step(arch.loss_fn, cfg, opt_cfg,
+                                   microbatches=args.microbatches))
+    trainer = Trainer(step, stream,
+                      LoopConfig(total_steps=args.steps,
+                                 ckpt_every=args.ckpt_every,
+                                 ckpt_dir=f"{args.ckpt_dir}/{args.arch}"),
+                      params, opt_state)
+    end = trainer.fit()
+    last = trainer.metrics_log[-1] if trainer.metrics_log else {}
+    log.info("done at step %d: %s", end, last)
+    print(f"final step={end} loss={last.get('loss')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model zoo for the assigned architectures.
+
+Families:
+  - LM transformers (dense GQA, MLA, MoE) — transformer.py / moe.py
+  - GNNs (gcn, pna, meshgraphnet, dimenet) — gnn/
+  - RecSys (dlrm) — recsys/
+
+Each family exposes ``init_params(key, cfg)``, ``loss_fn(params, batch, cfg)``
+and (for LMs) ``decode_step(params, cache, batch, cfg)``; the launch layer
+wraps them into train/serve steps with optimizer and sharding.
+"""

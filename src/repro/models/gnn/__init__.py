@@ -1,0 +1,5 @@
+from repro.models.gnn import dimenet, gcn, meshgraphnet, pna
+from repro.models.gnn.common import segment_mean, segment_softmax_norm
+
+__all__ = ["dimenet", "gcn", "meshgraphnet", "pna", "segment_mean",
+           "segment_softmax_norm"]

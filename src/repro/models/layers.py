@@ -1,0 +1,162 @@
+"""Shared neural-net layers (pure functions over param dicts).
+
+Conventions:
+  - params are nested dicts of jnp arrays; master dtype fp32, compute bf16;
+  - every layer takes an explicit ``compute_dtype``;
+  - initializers take an explicit PRNG key (splittable, deterministic);
+  - activations may carry logical sharding annotations via ``shard_hint``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ------------------------------------------------------------------ helpers
+def shard_hint(x: jax.Array, spec: P | None) -> jax.Array:
+    """Attach a sharding constraint when tracing under a mesh; no-op outside."""
+    if spec is None:
+        return x
+    try:
+        from jax.sharding import NamedSharding
+        import jax.core
+
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.shape:
+            return x
+        # only constrain if all named axes exist on the mesh
+        for axis in jax.tree_util.tree_leaves(tuple(spec)):
+            if axis is not None and axis not in mesh.shape:
+                return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except Exception:
+        return x
+
+
+def dense_init(key, in_dim: int, out_dim: int, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * scale
+
+
+def embed_init(key, vocab: int, dim: int):
+    return jax.random.normal(key, (vocab, dim), dtype=jnp.float32) * 0.02
+
+
+# ------------------------------------------------------------------- norms
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * gamma.astype(dt)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * gamma.astype(dt) + beta.astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float = 1e4):
+    """positions int32 [...]: returns (sin, cos) with trailing dim head_dim/2."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., H, D]; sin/cos broadcastable [..., 1, D/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin = sin.astype(x.dtype)
+    cos = cos.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# --------------------------------------------------------------- attention
+def gqa_attention(
+    q: jax.Array,  # [B, S, Hq, D]
+    k: jax.Array,  # [B, T, Hkv, D]
+    v: jax.Array,  # [B, T, Hkv, D]
+    causal: bool = True,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+) -> jax.Array:
+    """Grouped-query attention with stable fp32 softmax.
+
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``kv_len``: number of valid KV entries (decode with preallocated cache).
+    """
+    b, s, hq, d = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, s, hkv, g, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", q, k).astype(jnp.float32)
+    logits *= 1.0 / math.sqrt(d)
+    if causal:
+        qpos = jnp.arange(s)[:, None] + q_offset
+        kpos = jnp.arange(t)[None, :]
+        mask = kpos <= qpos  # [s, t]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(t) < kv_len  # [t]
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v)
+    return out.reshape(b, s, hq, d)
+
+
+# ------------------------------------------------------------------- MLPs
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    h = jax.nn.silu(x @ w_gate.astype(x.dtype)) * (x @ w_up.astype(x.dtype))
+    return h @ w_down.astype(x.dtype)
+
+
+def mlp(x: jax.Array, weights: Sequence[jax.Array],
+        biases: Sequence[jax.Array] | None = None,
+        act=jax.nn.relu, final_act: bool = False) -> jax.Array:
+    n = len(weights)
+    for i, w in enumerate(weights):
+        x = x @ w.astype(x.dtype)
+        if biases is not None:
+            x = x + biases[i].astype(x.dtype)
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def mlp_init(key, dims: Sequence[int], with_bias: bool = True):
+    ws, bs = [], []
+    for i in range(len(dims) - 1):
+        key, k1 = jax.random.split(key)
+        ws.append(dense_init(k1, dims[i], dims[i + 1]))
+        if with_bias:
+            bs.append(jnp.zeros((dims[i + 1],), jnp.float32))
+    params = {"w": ws}
+    if with_bias:
+        params["b"] = bs
+    return params
+
+
+def mlp_apply(params, x, act=jax.nn.relu, final_act: bool = False):
+    return mlp(x, params["w"], params.get("b"), act=act, final_act=final_act)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore: int = -1) -> jax.Array:
+    """Mean CE over non-ignored positions; logits [..., V], labels int [...]"""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels != ignore).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

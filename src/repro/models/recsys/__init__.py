@@ -1,0 +1,3 @@
+from repro.models.recsys import dlrm
+
+__all__ = ["dlrm"]

@@ -1,0 +1,492 @@
+"""Decoder-only LM stack: dense GQA, MLA (DeepSeek-V2), and MoE variants.
+
+Layers are parameter-stacked and iterated with ``lax.scan`` so the HLO stays
+one-layer-sized regardless of depth (dry-run compile cost, and the layout
+production frameworks use).  Both a training forward (full attention) and a
+KV-cache decode step are provided; MLA decode uses the *absorbed* form
+(cache = compressed c_kv + shared RoPE key — the memory win that defines
+MLA), matching DeepSeek-V2 practice.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (apply_rope, cross_entropy_loss, dense_init,
+                                 embed_init, rmsnorm, rope_angles, shard_hint)
+from repro.models.moe import MoEConfig, moe_apply, moe_init
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    attn: str = "gqa"  # "gqa" | "mla"
+    # MLA geometry (DeepSeek-V2)
+    q_lora: int = 0
+    kv_lora: int = 512
+    rope_head_dim: int = 64
+    nope_head_dim: int = 128
+    v_head_dim: int = 128
+    rope_theta: float = 1e4
+    moe: MoEConfig | None = None
+    remat: bool = True
+    # remat policy: "full" (recompute everything), "dots" (save matmul
+    # outputs, recompute elementwise — Megatron-style selective remat)
+    remat_policy: str = "full"
+    # keep attention logits in fp32 (stable softmax) or bf16 (halves the
+    # S×T HBM traffic; max-subtraction still in fp32) — §Perf knob
+    attn_fp32_logits: bool = True
+    compute_dtype: str = "bfloat16"
+    # python-loop the layer stack instead of lax.scan: used by the roofline
+    # analyzer's small-depth variants (XLA cost analysis counts a scan body
+    # once regardless of trip count, so unrolled variants are differenced
+    # to recover true per-layer cost)
+    unroll_layers: bool = False
+    # activation sharding hints (logical): filled by the sharding rules
+    act_spec: Any = None  # P over [batch, seq, model_dim]
+    logits_spec: Any = None
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for 6·N·D roofline accounting)."""
+        d, v = self.d_model, self.vocab
+        if self.attn == "mla":
+            qk = self.nope_head_dim + self.rope_head_dim
+            attn = (d * self.q_lora + self.q_lora * self.n_heads * qk
+                    + d * self.kv_lora + d * self.rope_head_dim
+                    + self.kv_lora * self.n_heads * self.nope_head_dim
+                    + self.kv_lora * self.n_heads * self.v_head_dim
+                    + self.n_heads * self.v_head_dim * d)
+        else:
+            attn = d * self.n_heads * self.d_head * 2 \
+                + d * self.n_kv_heads * self.d_head * 2
+        if self.moe is not None:
+            ff_active = 3 * d * self.moe.d_ff_expert * (
+                self.moe.top_k + self.moe.n_shared)
+            ff_total = 3 * d * self.moe.d_ff_expert * (
+                self.moe.n_experts + self.moe.n_shared) + d * self.moe.n_experts
+            dense_ff = 3 * d * self.d_ff
+            nd = self.moe.first_dense_layers
+            total = self.n_layers * attn + nd * dense_ff \
+                + (self.n_layers - nd) * ff_total + 2 * v * d
+            object.__setattr__(self, "_active",
+                               self.n_layers * attn + nd * dense_ff
+                               + (self.n_layers - nd) * ff_active + 2 * v * d)
+            return total
+        return self.n_layers * (attn + 3 * d * self.d_ff) + 2 * v * d
+
+    def active_param_count(self) -> int:
+        self.param_count()
+        return getattr(self, "_active", self.param_count())
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+
+def _init_attn(key, cfg: LMConfig):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    if cfg.attn == "mla":
+        qk = cfg.nope_head_dim + cfg.rope_head_dim
+        p = {
+            "w_dq": dense_init(ks[0], d, cfg.q_lora),
+            "q_ln": jnp.ones((cfg.q_lora,), jnp.float32),
+            "w_uq": dense_init(ks[1], cfg.q_lora, cfg.n_heads * qk),
+            "w_dkv": dense_init(ks[2], d, cfg.kv_lora),
+            "kv_ln": jnp.ones((cfg.kv_lora,), jnp.float32),
+            "w_uk": dense_init(ks[3], cfg.kv_lora,
+                               cfg.n_heads * cfg.nope_head_dim),
+            "w_uv": dense_init(ks[4], cfg.kv_lora,
+                               cfg.n_heads * cfg.v_head_dim),
+            "w_kr": dense_init(ks[5], d, cfg.rope_head_dim),
+            "wo": dense_init(ks[6], cfg.n_heads * cfg.v_head_dim, d),
+        }
+        return p
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * cfg.d_head),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * cfg.d_head),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * cfg.d_head),
+        "wo": dense_init(ks[3], cfg.n_heads * cfg.d_head, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * cfg.d_head,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.d_head,), jnp.float32)
+        p["k_norm"] = jnp.ones((cfg.d_head,), jnp.float32)
+    return p
+
+
+def _init_layer(key, cfg: LMConfig, use_moe: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+        "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+        "attn": _init_attn(k1, cfg),
+    }
+    if use_moe:
+        p["moe"] = moe_init(k2, cfg.d_model, cfg.moe)
+    else:
+        p["mlp"] = {
+            "w_gate": dense_init(k2, cfg.d_model, cfg.d_ff),
+            "w_up": dense_init(jax.random.fold_in(k2, 1), cfg.d_model, cfg.d_ff),
+            "w_down": dense_init(k3, cfg.d_ff, cfg.d_model),
+        }
+    return p
+
+
+def init_params(key, cfg: LMConfig):
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+    params = {"embed": embed_init(k_embed, cfg.vocab, cfg.d_model),
+              "final_ln": jnp.ones((cfg.d_model,), jnp.float32),
+              "lm_head": dense_init(k_head, cfg.d_model, cfg.vocab)}
+    if n_dense:
+        keys = jax.random.split(jax.random.fold_in(k_layers, 0), n_dense)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, use_moe=False))(keys)
+    if n_moe:
+        keys = jax.random.split(jax.random.fold_in(k_layers, 1), n_moe)
+        params["moe_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, use_moe=True))(keys)
+    return params
+
+
+# --------------------------------------------------------------------------
+# attention blocks (training / prefill path)
+# --------------------------------------------------------------------------
+
+
+def _attention_full(x, p, cfg: LMConfig, sin, cos):
+    b, s, d = x.shape
+    if cfg.attn == "mla":
+        return _mla_full(x, p, cfg, sin, cos)
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    out = _gqa(q, k, v, causal=True, fp32_logits=cfg.attn_fp32_logits)
+    return out.reshape(b, s, hq * dh) @ p["wo"].astype(x.dtype)
+
+
+def _gqa(q, k, v, causal=True, q_offset=0, kv_len=None, fp32_logits=True):
+    """GQA with possibly different v head dim."""
+    b, s, hq, dqk = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, dqk)
+    acc_dtype = jnp.float32 if fp32_logits else q.dtype
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32).astype(acc_dtype)
+    logits = logits * jnp.asarray(1.0 / math.sqrt(dqk), acc_dtype)
+    neg = jnp.asarray(jnp.finfo(acc_dtype).min, acc_dtype)
+    if causal:
+        qpos = jnp.arange(s)[:, None] + q_offset
+        kpos = jnp.arange(t)[None, :]
+        logits = jnp.where((kpos <= qpos)[None, None, None], logits, neg)
+    if kv_len is not None:
+        valid = jnp.arange(t) < kv_len  # [t]
+        logits = jnp.where(valid[None, None, None, None, :], logits, neg)
+    # stable softmax: max/sum reductions in fp32 even on the bf16 path
+    m = jnp.max(logits.astype(jnp.float32), axis=-1, keepdims=True)
+    ex = jnp.exp(logits - m.astype(acc_dtype))
+    denom = jnp.sum(ex.astype(jnp.float32), axis=-1, keepdims=True)
+    probs = (ex / denom.astype(acc_dtype)).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthe->bshge", probs, v)
+    return out.reshape(b, s, hq, dv)
+
+
+def _mla_full(x, p, cfg: LMConfig, sin, cos):
+    b, s, d = x.shape
+    h, dn, dr, dv = (cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim,
+                     cfg.v_head_dim)
+    cq = rmsnorm(x @ p["w_dq"].astype(x.dtype), p["q_ln"])
+    q = (cq @ p["w_uq"].astype(x.dtype)).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, sin, cos)
+    ckv = rmsnorm(x @ p["w_dkv"].astype(x.dtype), p["kv_ln"])
+    k_nope = (ckv @ p["w_uk"].astype(x.dtype)).reshape(b, s, h, dn)
+    v = (ckv @ p["w_uv"].astype(x.dtype)).reshape(b, s, h, dv)
+    k_rope = (x @ p["w_kr"].astype(x.dtype)).reshape(b, s, 1, dr)
+    k_rope = apply_rope(k_rope, sin, cos)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))],
+                             axis=-1)
+    out = _gqa(q_full, k_full, v, causal=True, fp32_logits=cfg.attn_fp32_logits)
+    return out.reshape(b, s, h * dv) @ p["wo"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# forward / loss
+# --------------------------------------------------------------------------
+
+
+def _layer_fwd(x, p, cfg: LMConfig, sin, cos, use_moe: bool):
+    h = rmsnorm(x, p["ln1"])
+    x = x + shard_hint(_attention_full(h, p["attn"], cfg, sin, cos),
+                       cfg.act_spec)
+    h2 = rmsnorm(x, p["ln2"])
+    if use_moe:
+        b, s, d = h2.shape
+        y, aux = moe_apply(p["moe"], h2.reshape(b * s, d), cfg.moe)
+        y = y.reshape(b, s, d)
+    else:
+        m = p["mlp"]
+        y = jax.nn.silu(h2 @ m["w_gate"].astype(x.dtype)) * (
+            h2 @ m["w_up"].astype(x.dtype))
+        y = y @ m["w_down"].astype(x.dtype)
+        aux = jnp.zeros((), jnp.float32)
+    x = x + shard_hint(y, cfg.act_spec)
+    return x, aux
+
+
+def forward(params, tokens: jax.Array, cfg: LMConfig) -> tuple[jax.Array, jax.Array]:
+    """tokens int32 [B, S] -> (logits [B, S, V] fp32-safe, aux loss)."""
+    b, s = tokens.shape
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = shard_hint(x, cfg.act_spec)
+    positions = jnp.arange(s, dtype=jnp.int32)
+    dr = cfg.rope_head_dim if cfg.attn == "mla" else cfg.d_head
+    sin, cos = rope_angles(positions, dr, cfg.rope_theta)
+    sin, cos = sin[None, :, None, :], cos[None, :, None, :]
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_stack(x, stack, use_moe):
+        fwd = lambda xx, pp: _layer_fwd(xx, pp, cfg, sin, cos, use_moe)
+        if cfg.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots" else None)
+            fwd = jax.checkpoint(fwd, policy=policy)
+        if cfg.unroll_layers:
+            aux = jnp.zeros((), jnp.float32)
+            n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+            for i in range(n):
+                layer_p = jax.tree.map(lambda l: l[i], stack)
+                x, a = fwd(x, layer_p)
+                aux = aux + a
+            return x, aux
+
+        def body(carry, layer_p):
+            xc, aux = carry
+            xn, a = fwd(xc, layer_p)
+            return (xn, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), stack)
+        return x, aux
+
+    if "dense_layers" in params:
+        x, a = run_stack(x, params["dense_layers"], use_moe=False)
+        aux_total += a
+    if "moe_layers" in params:
+        x, a = run_stack(x, params["moe_layers"], use_moe=True)
+        aux_total += a
+    x = rmsnorm(x, params["final_ln"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    logits = shard_hint(logits, cfg.logits_spec)
+    return logits, aux_total
+
+
+def loss_fn(params, batch: dict, cfg: LMConfig) -> jax.Array:
+    logits, aux = forward(params, batch["tokens"], cfg)
+    return cross_entropy_loss(logits, batch["labels"]) + aux
+
+
+# --------------------------------------------------------------------------
+# decode (serving) path
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    """Preallocated KV cache, layer-stacked for scan."""
+    lt = cfg.n_layers
+    if cfg.attn == "mla":
+        return {
+            "ckv": jnp.zeros((lt, batch, max_len, cfg.kv_lora), cfg.dtype),
+            "krope": jnp.zeros((lt, batch, max_len, cfg.rope_head_dim),
+                               cfg.dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((lt, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                       cfg.dtype),
+        "v": jnp.zeros((lt, batch, max_len, cfg.n_kv_heads, cfg.d_head),
+                       cfg.dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _gqa_decode(x, p, cfg, cache_k, cache_v, pos, sin, cos):
+    b, s, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q, k, v = (q + p["bq"].astype(x.dtype), k + p["bk"].astype(x.dtype),
+                   v + p["bv"].astype(x.dtype))
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    ck = jax.lax.dynamic_update_slice(cache_k, k, (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v, (0, pos, 0, 0))
+    out = _gqa(q, ck, cv, causal=False, kv_len=pos + s,
+               fp32_logits=cfg.attn_fp32_logits)
+    return out.reshape(b, s, hq * dh) @ p["wo"].astype(x.dtype), ck, cv
+
+
+def _mla_decode(x, p, cfg, cache_ckv, cache_kr, pos, sin, cos):
+    """Absorbed MLA decode: attention runs in the compressed c_kv space."""
+    b, s, d = x.shape
+    h, dn, dr, dv = (cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim,
+                     cfg.v_head_dim)
+    c = cfg.kv_lora
+    cq = rmsnorm(x @ p["w_dq"].astype(x.dtype), p["q_ln"])
+    q = (cq @ p["w_uq"].astype(x.dtype)).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, sin, cos)
+    ckv_new = rmsnorm(x @ p["w_dkv"].astype(x.dtype), p["kv_ln"])  # [b,s,c]
+    kr_new = apply_rope((x @ p["w_kr"].astype(x.dtype)).reshape(b, s, 1, dr),
+                        sin, cos).reshape(b, s, dr)
+    cache_ckv = jax.lax.dynamic_update_slice(cache_ckv, ckv_new, (0, pos, 0))
+    cache_kr = jax.lax.dynamic_update_slice(cache_kr, kr_new, (0, pos, 0))
+    # absorb W_uk into q:  q_abs[b,s,h,c] = q_nope · W_uk[c,h,dn]
+    w_uk3 = p["w_uk"].astype(x.dtype).reshape(c, h, dn)
+    q_abs = jnp.einsum("bshn,chn->bshc", q_nope, w_uk3)
+    logits = (jnp.einsum("bshc,btc->bhst", q_abs, cache_ckv)
+              + jnp.einsum("bshr,btr->bhst", q_rope, cache_kr))
+    logits = logits.astype(jnp.float32) / math.sqrt(dn + dr)
+    t = cache_ckv.shape[1]
+    valid = jnp.arange(t)[None, :] < (pos + s)
+    logits = jnp.where(valid[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    ctx_c = jnp.einsum("bhst,btc->bshc", probs, cache_ckv)
+    w_uv3 = p["w_uv"].astype(x.dtype).reshape(c, h, dv)
+    ctx_v = jnp.einsum("bshc,chv->bshv", ctx_c, w_uv3)
+    out = ctx_v.reshape(b, s, h * dv) @ p["wo"].astype(x.dtype)
+    return out, cache_ckv, cache_kr
+
+
+def decode_step(params, cache: dict, tokens: jax.Array, cfg: LMConfig):
+    """One decode step: tokens [B, S_new] -> (logits [B, S_new, V], cache)."""
+    b, s = tokens.shape
+    pos = cache["pos"]
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    positions = pos + jnp.arange(s, dtype=jnp.int32)
+    dr = cfg.rope_head_dim if cfg.attn == "mla" else cfg.d_head
+    sin, cos = rope_angles(positions, dr, cfg.rope_theta)
+    sin, cos = sin[None, :, None, :], cos[None, :, None, :]
+
+    n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.n_layers
+    mla = cfg.attn == "mla"
+
+    def body(x, scanned):
+        layer_p, cache_sl, use_moe = scanned
+        h = rmsnorm(x, layer_p["ln1"])
+        if mla:
+            out, c1, c2 = _mla_decode(h, layer_p["attn"], cfg, cache_sl[0],
+                                      cache_sl[1], pos, sin, cos)
+        else:
+            out, c1, c2 = _gqa_decode(h, layer_p["attn"], cfg, cache_sl[0],
+                                      cache_sl[1], pos, sin, cos)
+        x = x + out
+        h2 = rmsnorm(x, layer_p["ln2"])
+        if use_moe:
+            y, _ = moe_apply(layer_p["moe"], h2.reshape(b * s, -1), cfg.moe)
+            y = y.reshape(b, s, -1)
+        else:
+            m = layer_p["mlp"]
+            y = jax.nn.silu(h2 @ m["w_gate"].astype(x.dtype)) * (
+                h2 @ m["w_up"].astype(x.dtype))
+            y = y @ m["w_down"].astype(x.dtype)
+        return x + y, (c1, c2)
+
+    ck_name, cv_name = ("ckv", "krope") if mla else ("k", "v")
+    new_c1 = []
+    new_c2 = []
+    li = 0
+
+    def run_cache_stack(x, stack, c1_sl, c2_sl, use_moe):
+        if cfg.unroll_layers:
+            n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+            c1_out, c2_out = [], []
+            for i in range(n):
+                layer_p = jax.tree.map(lambda l: l[i], stack)
+                x, (c1n, c2n) = body(x, (layer_p, (c1_sl[i], c2_sl[i]),
+                                         use_moe))
+                c1_out.append(c1n)
+                c2_out.append(c2n)
+            return x, (jnp.stack(c1_out), jnp.stack(c2_out))
+
+        def scan_body(carry, xs):
+            layer_p, c1, c2 = xs
+            xn, (c1n, c2n) = body(carry, (layer_p, (c1, c2), use_moe))
+            return xn, (c1n, c2n)
+
+        return jax.lax.scan(scan_body, x, (stack, c1_sl, c2_sl))
+
+    if "dense_layers" in params:
+        stack = params["dense_layers"]
+        nd = jax.tree_util.tree_leaves(stack)[0].shape[0]
+        x, (c1s, c2s) = run_cache_stack(
+            x, stack, cache[ck_name][li:li + nd], cache[cv_name][li:li + nd],
+            use_moe=False)
+        new_c1.append(c1s)
+        new_c2.append(c2s)
+        li += nd
+    if "moe_layers" in params:
+        stack = params["moe_layers"]
+        nm = jax.tree_util.tree_leaves(stack)[0].shape[0]
+        x, (c1s, c2s) = run_cache_stack(
+            x, stack, cache[ck_name][li:li + nm], cache[cv_name][li:li + nm],
+            use_moe=True)
+        new_c1.append(c1s)
+        new_c2.append(c2s)
+        li += nm
+    x = rmsnorm(x, params["final_ln"])
+    logits = x @ params["lm_head"].astype(x.dtype)
+    new_cache = {
+        ck_name: jnp.concatenate(new_c1, axis=0),
+        cv_name: jnp.concatenate(new_c2, axis=0),
+        "pos": pos + s,
+    }
+    return logits, new_cache

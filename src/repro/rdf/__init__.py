@@ -1,0 +1,14 @@
+from repro.rdf.dictionary import Dictionary, RDF_TYPE, RDFS_SUBCLASSOF
+from repro.rdf.graph import LabeledGraph
+from repro.rdf.transform import direct_transform, type_aware_transform
+from repro.rdf.triples import TripleStore
+
+__all__ = [
+    "Dictionary",
+    "LabeledGraph",
+    "TripleStore",
+    "direct_transform",
+    "type_aware_transform",
+    "RDF_TYPE",
+    "RDFS_SUBCLASSOF",
+]

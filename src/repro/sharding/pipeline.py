@@ -1,0 +1,117 @@
+"""GPipe-style pipeline parallelism over the ``pod`` axis.
+
+The layer stack is split into S = pod-axis-size stages (layer-stacked params
+sharded P("pod", ...) on the layer dim).  Microbatches stream through the
+stages; activations move stage→stage with ``collective_permute`` each tick
+(M + S − 1 ticks total, the classic GPipe bubble).  Because ppermute has a
+transpose rule, ``jax.grad`` differentiates straight through the schedule —
+backward runs the reverse pipeline automatically.
+
+This is the dense-LM path (MoE layers keep EP over ``model`` instead of PP;
+combining both is out of scope and noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cross_entropy_loss, rmsnorm, rope_angles
+from repro.models.transformer import LMConfig, _layer_fwd
+
+
+def _stage_layers_fwd(x, stage_params, cfg: LMConfig, sin, cos):
+    """Run this stage's layer slice (scan over local layers)."""
+
+    def body(carry, layer_p):
+        y, _ = _layer_fwd(carry, layer_p, cfg, sin, cos, use_moe=False)
+        return y, None
+
+    x, _ = jax.lax.scan(body, x, stage_params)
+    return x
+
+
+def pipelined_loss(params, batch, cfg: LMConfig, *, n_stages: int,
+                   n_microbatches: int, axis: str = "pod"):
+    """SPMD GPipe loss, to be wrapped in shard_map over the ``pod`` axis.
+
+    params: this stage's slice — {"embed","final_ln","lm_head",
+    "dense_layers"(L/S leading)}; embed/head replicated (stage 0 embeds,
+    last stage computes loss; the dead weights elsewhere are GSPMD-pruned).
+    batch: full per-pod batch {"tokens","labels"} [B, T]; B split into
+    microbatches here.
+    """
+    stage = jax.lax.axis_index(axis)
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, t = tokens.shape
+    m = n_microbatches
+    mb = b // m
+    tok_mb = tokens.reshape(m, mb, t)
+    lab_mb = labels.reshape(m, mb, t)
+
+    positions = jnp.arange(t, dtype=jnp.int32)
+    dr = cfg.d_head
+    sin, cos = rope_angles(positions, dr, cfg.rope_theta)
+    sin, cos = sin[None, :, None, :], cos[None, :, None, :]
+
+    n_ticks = m + n_stages - 1
+    buf = jnp.zeros((mb, t, cfg.d_model), cfg.dtype)  # inter-stage activation
+    loss_acc = jnp.zeros((), jnp.float32)
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def tick(carry, i):
+        buf, loss_acc = carry
+        mb_in = jnp.clip(i, 0, m - 1)
+        mb_out = jnp.clip(i - (n_stages - 1), 0, m - 1)
+        # stage 0 ingests microbatch i (if in range); others use buf
+        x_in = params["embed"].astype(cfg.dtype)[tok_mb[mb_in]]
+        x = jnp.where(stage == 0, x_in, buf)
+        y = _stage_layers_fwd(x, params["dense_layers"], cfg, sin, cos)
+        # last stage: compute loss for the microbatch that just completed
+        h = rmsnorm(y, params["final_ln"])
+        logits = h @ params["lm_head"].astype(y.dtype)
+        mb_loss = cross_entropy_loss(logits, lab_mb[mb_out])
+        active = (stage == n_stages - 1) & (i >= n_stages - 1) & (i < n_ticks)
+        loss_acc = loss_acc + jnp.where(active, mb_loss, 0.0)
+        # ship activations to the next stage
+        buf = jax.lax.ppermute(y, axis, perm)
+        return (buf, loss_acc), None
+
+    (buf, loss_acc), _ = jax.lax.scan(tick, (buf, loss_acc),
+                                      jnp.arange(n_ticks))
+    # all stages must return the same loss: broadcast from the last stage
+    total = jax.lax.psum(loss_acc, axis)  # only last stage contributed
+    return total / m
+
+
+def make_pipeline_train_step(cfg: LMConfig, opt_cfg, mesh,
+                             n_microbatches: int = 4, axis: str = "pod"):
+    """shard_map-wrapped pipelined train step (pods = stages)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.train.optimizer import adamw_update
+
+    n_stages = mesh.shape[axis]
+
+    param_pspec = {
+        "embed": P(),
+        "final_ln": P(),
+        "lm_head": P(),
+        "dense_layers": jax.tree.map(lambda _: P(axis), {"any": 0}),
+    }
+
+    def local_step(params, opt_state, batch):
+        def loss_fn(p):
+            return pipelined_loss(p, batch, cfg, n_stages=n_stages,
+                                  n_microbatches=n_microbatches, axis=axis)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        # DP mean over data axis happens in adamw_update(axis_name="data")
+        params, opt_state, gn = adamw_update(
+            params, grads, opt_state, opt_cfg,
+            axis_name="data" if "data" in mesh.axis_names else None)
+        return params, opt_state, {"loss": loss, "grad_norm": gn}
+
+    return local_step, param_pspec

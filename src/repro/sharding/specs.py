@@ -1,0 +1,203 @@
+"""Sharding rules: parameter / optimizer / batch PartitionSpecs per family.
+
+LM rules (Megatron-style TP + ZeRO-/FSDP-style data sharding):
+  - column-parallel projections (wq/wk/wv/w_gate/w_up/w_uq/w_uk/w_uv):
+    output dim → ``model``, input dim → ``data`` (ZeRO)
+  - row-parallel projections (wo/w_down): input dim → ``model``, output →
+    ``data``
+  - MoE expert stacks: expert dim → ``model`` (expert parallelism), token
+    dims ZeRO-sharded over ``data``
+  - embed: vocab → ``model``;  lm_head: d → ``data``, vocab → ``model``
+  - norms / small biases: replicated
+Optimizer moments inherit the parameter spec (fully-sharded optimizer).
+
+GNN rules: parameters replicated (they are tiny); edge arrays sharded over
+every mesh axis; node tensors replicated (small graphs) or feature-sharded.
+
+DLRM rules: embedding tables row-sharded over ``model`` when the vocab is
+large & divisible (small tales replicated — the standard mixed placement);
+MLPs replicated; batch over data axes.
+
+All rules degrade to replication when a dimension is not divisible by the
+assigned axis size — the fallback keeps every (arch × mesh) cell lowerable.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def _fits(shape, spec, mesh) -> bool:
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is None:
+            continue
+        if dim % _axis_size(mesh, axis):
+            return False
+    return True
+
+
+def _guard(shape, spec, mesh) -> P:
+    """Use spec if divisible, else progressively drop axes (replicate)."""
+    if _fits(shape, spec, mesh):
+        return spec
+    # drop axes one by one from the rightmost constrained dim
+    axes = list(tuple(spec))
+    for i in reversed(range(len(axes))):
+        if axes[i] is not None:
+            trial = P(*axes[:i], None, *axes[i + 1:])
+            if _fits(shape, trial, mesh):
+                return trial
+            axes[i] = None
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+_REPLICATED_NAMES = {"ln1", "ln2", "final_ln", "q_ln", "kv_ln", "q_norm",
+                     "k_norm", "bq", "bk", "bv", "ln_g", "ln_b"}
+_COL_NAMES = {"wq", "wk", "wv", "w_gate", "w_up", "w_uq", "w_uk", "w_uv"}
+_ROW_NAMES = {"wo", "w_down"}
+
+
+def _lm_leaf_spec(path: tuple[str, ...], shape, mesh, dp, zero: bool) -> P:
+    name = path[-1]
+    stacked = len(path) > 1 and path[0] in ("dense_layers", "moe_layers")
+    in_moe = "moe" in path and "shared" not in path
+    zdp = dp if zero else None
+
+    if name in _REPLICATED_NAMES or len(shape) <= 1 + (1 if stacked else 0):
+        return P()
+    if name == "embed":
+        return _guard(shape, P("model", None), mesh)
+    if name == "lm_head":
+        return _guard(shape, P(zdp, "model"), mesh)
+    if name == "router":
+        return _guard(shape, P(*(None, zdp, None)[: len(shape)]), mesh)
+
+    lead = (None,) if stacked else ()
+    if in_moe and name in _COL_NAMES:  # [L, E, d, ff]
+        return _guard(shape, P(*lead, "model", zdp, None), mesh)
+    if in_moe and name in _ROW_NAMES:  # [L, E, ff, d]
+        return _guard(shape, P(*lead, "model", None, zdp), mesh)
+    if name in _COL_NAMES:  # [L, d_in, d_out]
+        return _guard(shape, P(*lead, zdp, "model"), mesh)
+    if name in _ROW_NAMES:  # [L, d_in, d_out] row-parallel
+        return _guard(shape, P(*lead, "model", zdp), mesh)
+    if name in ("w_dq", "w_dkv", "w_kr"):  # small down-projections
+        return _guard(shape, P(*lead, zdp, None), mesh)
+    return P()
+
+
+def _path_names(kp) -> tuple[str, ...]:
+    names = []
+    for entry in kp:
+        if hasattr(entry, "key"):
+            names.append(str(entry.key))
+        elif hasattr(entry, "idx"):
+            names.append(str(entry.idx))
+        elif hasattr(entry, "name"):
+            names.append(str(entry.name))
+    return tuple(names)
+
+
+def param_specs(abstract_params: Any, family: str, mesh, *,
+                zero: bool = True) -> Any:
+    """Pytree of PartitionSpec matching ``abstract_params``."""
+    dp = "data"  # ZeRO axis; pod stays pure DP (gradients all-reduced)
+
+    def leaf(kp, x):
+        path = _path_names(kp)
+        if family == "lm":
+            return _lm_leaf_spec(path, x.shape, mesh, dp, zero)
+        if family == "recsys":
+            if "tables" in path and len(x.shape) == 2 and x.shape[0] >= 4096:
+                return _guard(x.shape, P("model", None), mesh)
+            return P()
+        return P()  # gnn & default: replicate
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_params)
+
+
+def opt_state_specs(param_spec_tree: Any, opt_state_abstract: Any) -> Any:
+    """AdamW moments inherit their parameter's spec; step scalar replicated."""
+    from repro.train.optimizer import AdamWState
+
+    def like(tree):
+        return param_spec_tree
+
+    return AdamWState(
+        step=P(),
+        mu=param_spec_tree,
+        nu=param_spec_tree,
+        err=param_spec_tree if opt_state_abstract.err is not None else None,
+    )
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(arch_family: str, cell_kind: str, batch_abstract, mesh,
+                seq_shard: bool = False):
+    """in_shardings for the batch pytree of one cell."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    every = tuple(a for a in ("pod", "data", "model") if a in mesh.axis_names)
+
+    def leaf(kp, x):
+        path = _path_names(kp)
+        name = path[-1] if path else ""
+        shape = x.shape
+        if arch_family == "lm":
+            if name in ("tokens", "labels"):
+                spec = P(dp, "model") if (seq_shard and len(shape) == 2
+                                          and shape[1] > 1) else P(dp)
+                return _guard(shape, spec, mesh)
+            if name in ("k", "v"):  # [L, B, T, H, Dh]
+                if shape[1] == 1:  # batch-1 long-context: sequence-shard the
+                    return _guard(shape, P(None, None, every, None, None), mesh)
+                return _guard(shape, P(None, dp, "model", None, None), mesh)
+            if name in ("ckv", "krope"):  # [L, B, T, C]
+                if shape[1] == 1:
+                    return _guard(shape, P(None, None, every, None), mesh)
+                return _guard(shape, P(None, dp, "model", None), mesh)
+            if name == "pos":
+                return P()
+            return P()
+        if arch_family == "gnn":
+            if name in ("edge_src", "edge_dst", "t_kj", "t_ji"):
+                return _guard(shape, P(every), mesh)
+            if name == "edge_attr":
+                return _guard(shape, P(every, None), mesh)
+            if name in ("x",) and len(shape) == 2:
+                return _guard(shape, P(None, "model"), mesh)
+            return P()
+        if arch_family == "recsys":
+            if name == "cand":
+                return _guard(shape, P(every, None), mesh)
+            if name in ("dense", "sparse", "labels"):
+                return _guard(shape, P(dp), mesh)
+            return P()
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_abstract)

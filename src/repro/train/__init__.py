@@ -1,0 +1,4 @@
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+from repro.train.trainstep import make_train_step
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "make_train_step"]

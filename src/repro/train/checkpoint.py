@@ -1,0 +1,163 @@
+"""Checkpointing: atomic, keep-last-k, async, elastic on restore.
+
+Layout:  <dir>/step_<n>/   arrays.npz  (leaf path -> array)
+                           meta.json   (step, tree structure, extra)
+         <dir>/step_<n>.tmp.*          (staging; atomic rename commits)
+
+- *Atomic*: a checkpoint directory appears only via os.replace of a fully
+  written staging dir — a crash mid-write never leaves a half checkpoint
+  visible.
+- *Keep-k*: older step dirs are pruned after a successful commit.
+- *Async*: ``save(..., blocking=False)`` snapshots to host memory
+  synchronously (cheap) and writes in a daemon thread, overlapping I/O with
+  the next training steps.
+- *Elastic*: ``restore`` returns host numpy trees; the caller re-shards via
+  ``jax.device_put`` with whatever mesh is alive (topology changes between
+  save and restore are fine — arrays are saved unsharded).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.utils import get_logger
+
+log = get_logger("train.checkpoint")
+
+_SEP = "|"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in kp)
+        arr = np.asarray(leaf)
+        # npz cannot round-trip ml_dtypes (bf16/fp8): store a bit-view
+        if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype) \
+                or "float8" in str(arr.dtype):
+            arr = arr.view(np.uint16 if arr.dtype.itemsize == 2 else np.uint8)
+        flat[key] = arr
+    return flat
+
+
+def _part(entry) -> str:
+    if hasattr(entry, "key"):
+        return f"k:{entry.key}"
+    if hasattr(entry, "idx"):
+        return f"i:{entry.idx}"
+    if hasattr(entry, "name"):
+        return f"n:{entry.name}"
+    return f"?:{entry}"
+
+
+class Checkpointer:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = Path(directory)
+        self.keep = keep
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, trees: dict[str, Any], extra: dict | None = None,
+             blocking: bool = True) -> None:
+        # snapshot to host NOW (device buffers may be donated next step)
+        host = {name: _flatten(tree) for name, tree in trees.items()}
+        meta = {"step": int(step), "names": sorted(host),
+                "extra": extra or {}}
+        self.wait()
+        if blocking:
+            self._write(step, host, meta)
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host, meta), daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host: dict, meta: dict) -> None:
+        final = self.dir / f"step_{step:012d}"
+        staging = Path(tempfile.mkdtemp(prefix=f"step_{step:012d}.tmp.",
+                                        dir=self.dir))
+        try:
+            for name, flat in host.items():
+                np.savez(staging / f"{name}.npz", **flat)
+            (staging / "meta.json").write_text(json.dumps(meta))
+            if final.exists():
+                shutil.rmtree(final)
+            os.replace(staging, final)
+            log.info("checkpoint step %d committed (%s)", step, final)
+            self._prune()
+        except Exception:
+            shutil.rmtree(staging, ignore_errors=True)
+            raise
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(self.dir / f"step_{s:012d}", ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.iterdir():
+            if p.is_dir() and p.name.startswith("step_") and "tmp" not in p.name:
+                if (p / "meta.json").exists():  # committed only
+                    out.append(int(p.name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, templates: dict[str, Any], step: int | None = None,
+                shardings: dict[str, Any] | None = None):
+        """Restore trees shaped like ``templates``; optionally re-shard each
+        tree with a matching sharding pytree (elastic restore)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None
+        d = self.dir / f"step_{step:012d}"
+        meta = json.loads((d / "meta.json").read_text())
+        out: dict[str, Any] = {}
+        for name, template in templates.items():
+            flat = np.load(d / f"{name}.npz")
+            kps, treedef = jax.tree_util.tree_flatten_with_path(template)
+            leaves = []
+            shd_leaves = None
+            if shardings is not None and name in shardings:
+                shd_leaves = jax.tree_util.tree_leaves(
+                    shardings[name],
+                    is_leaf=lambda x: hasattr(x, "spec"))
+            for i, (kp, tmpl) in enumerate(kps):
+                key = _SEP.join(_part(p) for p in kp)
+                arr = flat[key]
+                if tuple(arr.shape) != tuple(tmpl.shape):
+                    raise ValueError(
+                        f"checkpoint leaf {key}: shape {arr.shape} != "
+                        f"template {tmpl.shape}")
+                tdt = np.dtype(tmpl.dtype)
+                if arr.dtype != tdt and arr.dtype.itemsize == tdt.itemsize \
+                        and arr.dtype.kind in "uV" and tdt.kind not in "iuf":
+                    arr = arr.view(tdt)  # bit-view restore (bf16/fp8)
+                elif arr.dtype != tdt and arr.dtype == np.uint16 \
+                        and "bfloat16" in str(tdt):
+                    arr = arr.view(tdt)
+                else:
+                    arr = arr.astype(tdt)
+                if shd_leaves is not None:
+                    arr = jax.device_put(arr, shd_leaves[i])
+                leaves.append(arr)
+            out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+        return int(meta["step"]), out, meta.get("extra", {})

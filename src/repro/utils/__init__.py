@@ -1,0 +1,4 @@
+from repro.utils.logging import get_logger
+from repro.utils.timing import Timer, timed
+
+__all__ = ["get_logger", "Timer", "timed"]

@@ -1,0 +1,35 @@
+"""Structured logging for the repro framework.
+
+One logger per subsystem; format carries the subsystem so multi-host logs
+interleave legibly.  ``REPRO_LOG=debug`` raises verbosity globally.
+"""
+
+from __future__ import annotations
+
+import logging
+import os
+import sys
+
+_FORMAT = "%(asctime)s %(levelname).1s %(name)s: %(message)s"
+_configured = False
+
+
+def _configure_root() -> None:
+    global _configured
+    if _configured:
+        return
+    level = getattr(logging, os.environ.get("REPRO_LOG", "info").upper(), logging.INFO)
+    handler = logging.StreamHandler(sys.stderr)
+    handler.setFormatter(logging.Formatter(_FORMAT, datefmt="%H:%M:%S"))
+    root = logging.getLogger("repro")
+    root.setLevel(level)
+    root.addHandler(handler)
+    root.propagate = False
+    _configured = True
+
+
+def get_logger(name: str) -> logging.Logger:
+    _configure_root()
+    if not name.startswith("repro"):
+        name = f"repro.{name}"
+    return logging.getLogger(name)

