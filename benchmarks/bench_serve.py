@@ -1,0 +1,137 @@
+"""Serving-layer throughput: closed-loop and open-loop load against the
+LUBM mix through the repro.serve scheduler (coalescing + plan cache).
+
+Closed loop: N client threads issue queries back-to-back for a fixed
+number of rounds — measures saturated throughput and latency under
+self-clocked load.  Open loop: a dispatcher injects requests at a target
+arrival rate regardless of completions — measures behavior when load is
+*offered*, not negotiated (queueing delay shows up in the percentiles).
+
+Emits ``serve.*`` CSV rows via benchmarks.common.emit.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.rdf.workloads import LUBM_QUERIES
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import Scheduler
+from repro.serve.server import DatasetRegistry
+
+from benchmarks.common import emit, lubm_typeaware
+
+
+def _registry(scale: int, density: float = 0.6):
+    g, maps = lubm_typeaware(scale, density)
+    metrics = ServeMetrics()
+    registry = DatasetRegistry(metrics)
+    registry.register("lubm", g, maps)
+    return registry
+
+
+def _warm(scheduler: Scheduler, queries: list[str]) -> None:
+    for q in queries:
+        scheduler.submit("lubm", q)
+
+
+def closed_loop(scale: int, clients: int, rounds: int) -> None:
+    registry = _registry(scale)
+    queries = [LUBM_QUERIES[k] for k in sorted(LUBM_QUERIES)]
+    with Scheduler(registry, workers=clients, max_queue=4 * clients,
+                   metrics=registry.metrics) as scheduler:
+        _warm(scheduler, queries)
+        latencies: list[float] = []
+        lock = threading.Lock()
+
+        def client(tid: int) -> None:
+            local = []
+            for r in range(rounds):
+                # stagger starting offsets so clients collide on queries
+                for i in range(len(queries)):
+                    q = queries[(tid + i) % len(queries)]
+                    t0 = time.perf_counter()
+                    scheduler.submit("lubm", q)
+                    local.append(time.perf_counter() - t0)
+            with lock:
+                latencies.extend(local)
+
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=clients) as pool:
+            list(pool.map(client, range(clients)))
+        wall = time.perf_counter() - t0
+    n = len(latencies)
+    lat = registry.metrics.latency
+    pc = registry.get("lubm").engine.plan_cache.snapshot()
+    emit(f"serve.closed.c{clients}.scale{scale}.throughput",
+         wall / max(n, 1), f"qps={n / wall:.1f}")
+    emit(f"serve.closed.c{clients}.scale{scale}.p50", lat.percentile(50) / 1e3)
+    emit(f"serve.closed.c{clients}.scale{scale}.p99", lat.percentile(99) / 1e3)
+    emit(f"serve.closed.c{clients}.scale{scale}.coalesced", 0,
+         f"{registry.metrics.coalesced.total():.0f}/{n}")
+    emit(f"serve.closed.c{clients}.scale{scale}.plan_cache_hit_rate", 0,
+         f"{pc['hit_rate']:.3f}")
+
+
+def open_loop(scale: int, target_qps: float, duration_s: float,
+              workers: int = 8) -> None:
+    registry = _registry(scale)
+    queries = [LUBM_QUERIES[k] for k in sorted(LUBM_QUERIES)]
+    with Scheduler(registry, workers=workers, max_queue=256,
+                   default_timeout_s=duration_s,
+                   metrics=registry.metrics) as scheduler:
+        _warm(scheduler, queries)
+        done: list[float] = []
+        errors = [0]
+        lock = threading.Lock()
+
+        def fire(q: str) -> None:
+            t0 = time.perf_counter()
+            try:
+                scheduler.submit("lubm", q)
+            except Exception:
+                with lock:
+                    errors[0] += 1
+                return
+            with lock:
+                done.append(time.perf_counter() - t0)
+
+        period = 1.0 / target_qps
+        t0 = time.perf_counter()
+        i = 0
+        with ThreadPoolExecutor(max_workers=workers * 4) as pool:
+            # fixed-rate arrivals: sleep to the schedule, not the completions
+            while (now := time.perf_counter()) - t0 < duration_s:
+                pool.submit(fire, queries[i % len(queries)])
+                i += 1
+                next_t = t0 + i * period
+                if (delay := next_t - time.perf_counter()) > 0:
+                    time.sleep(delay)
+        wall = time.perf_counter() - t0
+    n = len(done)
+    lat = registry.metrics.latency
+    emit(f"serve.open.q{target_qps:g}.scale{scale}.achieved",
+         wall / max(n, 1), f"qps={n / wall:.1f} offered={i / wall:.1f} "
+                           f"errors={errors[0]}")
+    emit(f"serve.open.q{target_qps:g}.scale{scale}.p50",
+         lat.percentile(50) / 1e3)
+    emit(f"serve.open.q{target_qps:g}.scale{scale}.p99",
+         lat.percentile(99) / 1e3)
+    emit(f"serve.open.q{target_qps:g}.scale{scale}.coalesced", 0,
+         f"{registry.metrics.coalesced.total():.0f}/{n}")
+
+
+def run(quick: bool = False) -> None:
+    scale = 1 if quick else 2
+    rounds = 2 if quick else 5
+    for clients in ([2, 4] if quick else [1, 4, 8]):
+        closed_loop(scale, clients, rounds)
+    for qps in ([20] if quick else [20, 50]):
+        open_loop(scale, qps, duration_s=3.0 if quick else 10.0)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived", flush=True)
+    run(quick=True)

@@ -13,7 +13,7 @@ import time
 
 
 SUITES = ["lubm", "typeaware", "opts", "parallel", "hetero", "bsbm",
-          "kernels", "archs"]
+          "kernels", "archs", "serve"]
 
 
 def main() -> None:

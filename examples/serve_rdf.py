@@ -1,29 +1,64 @@
-"""End-to-end driver: build a billion-triple-shaped (scaled-down) dataset and
-serve a batched SPARQL workload with latency statistics — the paper's
-deployment story (in-memory RDF accelerator).
+"""End-to-end serving demo: build a scaled-down LUBM dataset, host it in
+the repro.serve subsystem (registry + coalescing scheduler + HTTP), drive a
+concurrent workload, and show one HTTP round-trip — the paper's in-memory
+RDF accelerator deployed as a service.
 
-    PYTHONPATH=src python examples/serve_rdf.py [--scale 2]
+    PYTHONPATH=src python examples/serve_rdf.py [--scale 2] [--rounds 5]
 """
 
 import argparse
+import json
+import threading
+import urllib.request
+from urllib.parse import urlencode
 
-from repro.launch.serve import QueryService, build_dataset
-from repro.rdf.workloads import LUBM_QUERIES
+from repro.launch.serve import build_dataset
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import Scheduler
+from repro.serve.server import DatasetRegistry, make_server, serve_in_thread
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scale", type=int, default=2)
 ap.add_argument("--rounds", type=int, default=5)
+ap.add_argument("--clients", type=int, default=4)
 args = ap.parse_args()
 
-graph, maps, _ = build_dataset("lubm", args.scale, density=0.6)
+graph, maps, queries = build_dataset("lubm", args.scale, density=0.6)
 print("graph:", graph.stats())
-svc = QueryService(graph, maps)
 
-# mixed workload: every LUBM query, several rounds (first round pays
-# plan compilation; the compiled-plan cache serves the rest)
-for r in range(args.rounds):
-    for name, q in sorted(LUBM_QUERIES.items()):
-        res, ms = svc.execute(q)
-        if r == 0:
-            print(f"round0 {name:4s} count={res.count:7d} {ms:8.1f}ms (cold)")
-print("\nservice stats (all rounds):", svc.stats())
+registry = DatasetRegistry(ServeMetrics())
+registry.register("lubm", graph, maps)
+scheduler = Scheduler(registry, workers=4,
+                      metrics=registry.metrics).start()
+
+# mixed workload: every LUBM query, several rounds, N concurrent clients
+# (round 0 pays plan compilation; the fingerprint-keyed plan cache and
+# request coalescing serve the rest)
+def client(tid: int) -> None:
+    for r in range(args.rounds):
+        for name, q in sorted(queries.items()):
+            res = scheduler.submit("lubm", q)
+            if r == 0 and tid == 0:
+                print(f"round0 {name:4s} count={res.count:7d}")
+
+threads = [threading.Thread(target=client, args=(i,))
+           for i in range(args.clients)]
+for t in threads:
+    t.start()
+for t in threads:
+    t.join()
+
+print("\nservice stats (all rounds):",
+      json.dumps(registry.metrics.summary(), indent=None))
+print("plan cache:", registry.get("lubm").engine.plan_cache.snapshot())
+
+# same engine over HTTP: one round-trip against the bundled server
+server = make_server(registry, port=0, scheduler=scheduler)
+serve_in_thread(server)
+host, port = server.server_address[:2]
+url = f"http://{host}:{port}/sparql?" + urlencode(
+    {"query": queries["Q1"], "dataset": "lubm", "limit": 3})
+with urllib.request.urlopen(url, timeout=30) as r:
+    print("\nHTTP /sparql:", json.dumps(json.loads(r.read()), indent=None))
+server.shutdown()
+scheduler.stop()

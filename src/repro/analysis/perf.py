@@ -23,7 +23,7 @@ import jax
 
 from repro.analysis.model_flops import model_flops
 from repro.analysis.roofline import (CHIPS_SINGLE, PEAK_FLOPS, _combine,
-                                     _sub, roofline_terms)
+                                     _sub, roofline_terms, xla_cost)
 from repro.configs import get_arch
 from repro.launch.dryrun import collective_bytes
 from repro.launch.mesh import make_production_mesh
@@ -40,7 +40,7 @@ def _compile_cost(arch_name, cell, depth, profile):
             compiled = built["lower"]().compile()
         else:
             compiled = built["step"].lower(*built["args"]).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = xla_cost(compiled)
     return {
         "flops": float(cost.get("flops", 0.0)),
         "bytes": float(cost.get("bytes accessed", 0.0)),

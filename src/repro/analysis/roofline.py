@@ -70,6 +70,15 @@ def _sub(a, b):
                      for k in set(a["coll"]) | set(b["coll"])}}
 
 
+def xla_cost(compiled) -> dict:
+    """``Compiled.cost_analysis()`` normalized across jax versions: newer
+    jax returns a per-computation list of dicts, older a single dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
 def _variant_cost(arch_name: str, cell: str, depth: tuple[int, int],
                   cache_dir: Path) -> dict:
     """Compile the cell at a small depth and return its cost tuple."""
@@ -85,7 +94,7 @@ def _variant_cost(arch_name: str, cell: str, depth: tuple[int, int],
     built = build_cell(arch_name, cell, mesh, lm_depth=depth)
     with jax.set_mesh(mesh):
         compiled = built["step"].lower(*built["args"]).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = xla_cost(compiled)
     rec = {
         "flops": float(cost.get("flops", 0.0)),
         "bytes_accessed": float(cost.get("bytes accessed", 0.0)),

@@ -1,7 +1,8 @@
 from repro.core.exec import DeviceGraph, ExecOpts, Executor, Result
 from repro.core.plan import ExecPlan, build_plan, choose_start_vertex
 from repro.core.query import QueryGraph, build_query_graph
-from repro.core.sparql_exec import QueryResult, SparqlEngine
+from repro.core.sparql_exec import (CompiledBranch, CompiledOptional,
+                                    CompiledQuery, QueryResult, SparqlEngine)
 
 __all__ = [
     "DeviceGraph",
@@ -15,4 +16,7 @@ __all__ = [
     "build_query_graph",
     "QueryResult",
     "SparqlEngine",
+    "CompiledQuery",
+    "CompiledBranch",
+    "CompiledOptional",
 ]

@@ -14,6 +14,14 @@ Orchestrates the vectorized executor:
   are applied to the final table (the paper's strategy);
 - UNION branches are evaluated independently and concatenated (SPARQL UNION
   keeps duplicates, as the paper notes).
+
+Compilation and execution are split so the serving layer can share work:
+``compile()`` canonicalizes the query (``repro.serve.fingerprint``), keys a
+bounded LRU plan cache (``repro.serve.cache.PlanCache``) on the structural
+fingerprint, and returns a ``CompiledQuery`` of branch plans + projections;
+``execute_compiled()`` runs one.  Alpha-equivalent queries — same shape,
+different variable names / triple order — therefore compile exactly once
+per engine, and results are renamed back to the caller's variables.
 """
 
 from __future__ import annotations
@@ -59,43 +67,170 @@ class QueryResult:
         return out
 
 
+@dataclass
+class CompiledOptional:
+    """One OPTIONAL group compiled as an extension (left-join) plan."""
+
+    q_ext: QueryGraph       # base vertices + the optional's new vertices
+    base_cols: int          # number of pre-bound base columns
+    plan: ExecPlan          # extension steps only
+    expensive: list         # post-hoc filters on the joined table
+
+
+@dataclass
+class CompiledBranch:
+    """One UNION branch: base plan + optional extensions + projection."""
+
+    q: QueryGraph
+    plan: ExecPlan
+    expensive: list
+    optionals: list[CompiledOptional]
+    q_all: QueryGraph       # after all optional merges
+    variables: list[str]
+    kinds: list[str]
+
+
+@dataclass
+class CompiledQuery:
+    """A fully compiled query: what the plan cache stores and the executor
+    runs.  Variables are canonical names when built via ``compile()``."""
+
+    fingerprint: str
+    select: list[str]
+    branches: list[CompiledBranch]
+    variables: list[str]    # result columns (first branch's projection)
+    kinds: list[str]
+
+
 class SparqlEngine:
-    """End-to-end SPARQL evaluation against one transformed graph."""
+    """End-to-end SPARQL evaluation against one transformed graph.
+
+    ``plan_cache`` (a :class:`repro.serve.cache.PlanCache`) is keyed by the
+    query's structural fingerprint, so alpha-equivalent queries share one
+    compiled plan.  Pass ``plan_cache=None`` for the default bounded LRU, or
+    a pre-sized cache to share stats with a serving registry.
+    """
 
     def __init__(self, graph, maps: TransformMaps, opts: ExecOpts | None = None,
-                 estimate: str = "sampled"):
+                 estimate: str = "sampled", plan_cache=None):
         self.graph = graph
         self.maps = maps
         self.opts = opts or ExecOpts()
         self.estimate = estimate
         self.executor = Executor(graph, self.opts)
-        self._plan_cache: dict[str, list] = {}
+        if plan_cache is None:
+            from repro.serve.cache import PlanCache
+            plan_cache = PlanCache(capacity=256)
+        self._plan_cache = plan_cache
 
     # ------------------------------------------------------------------ API
+    @property
+    def plan_cache(self):
+        return self._plan_cache
+
+    def compile(self, source: str | SelectQuery):
+        """Canonicalize + compile through the plan cache.
+
+        Returns ``(compiled, canon)`` where ``compiled`` is a (possibly
+        shared) :class:`CompiledQuery` over canonical variable names and
+        ``canon`` is the :class:`~repro.serve.fingerprint.CanonicalQuery`
+        carrying this caller's variable renaming.
+        """
+        from repro.serve.fingerprint import canonicalize_query
+
+        ast = parse_sparql(source) if isinstance(source, str) else source
+        canon = canonicalize_query(ast)
+        return self.compile_canonical(canon), canon
+
+    def compile_canonical(self, canon) -> CompiledQuery:
+        """Compile a pre-canonicalized query through the plan cache."""
+        compiled = self._plan_cache.get(canon.fingerprint)
+        if compiled is None:
+            compiled = self._compile_ast(canon.query, canon.fingerprint)
+            self._plan_cache.put(canon.fingerprint, compiled)
+        return compiled
+
+    def execute_compiled(self, compiled: CompiledQuery) -> QueryResult:
+        """Run a compiled query; result columns keep its variable names."""
+        all_rows: list[np.ndarray] = []
+        variables, kinds = compiled.variables, compiled.kinds
+        for br in compiled.branches:
+            rows = self._exec_branch(br)
+            if br.variables != variables:
+                rows = _align_columns(rows, br.variables, variables)
+            all_rows.append(rows)
+        rows = np.concatenate(all_rows) if all_rows else np.zeros((0, 0), np.int32)
+        return QueryResult(list(variables), rows, list(kinds),
+                           count=int(rows.shape[0]))
+
     def query(self, sparql: str, collect: str = "bindings") -> QueryResult:
         ast = parse_sparql(sparql)
         return self.query_ast(ast, collect=collect)
 
     def query_ast(self, ast: SelectQuery, collect: str = "bindings") -> QueryResult:
-        branches = self._expand_unions(ast.where)
-        all_rows: list[np.ndarray] = []
-        variables: list[str] | None = None
-        kinds: list[str] | None = None
-        total = 0
-        for branch in branches:
-            res, q, vrs, knd = self._eval_group(branch, ast.select)
-            if variables is None:
-                variables, kinds = vrs, knd
-            total += res.shape[0]
-            # align columns across branches (UNION branches may differ)
-            if vrs != variables:
-                res = _align_columns(res, vrs, variables)
-            all_rows.append(res)
-        rows = np.concatenate(all_rows) if all_rows else np.zeros((0, 0), np.int32)
-        return QueryResult(variables or [], rows, kinds or [], count=int(rows.shape[0]))
+        compiled, canon = self.compile(ast)
+        res = self.execute_compiled(compiled)
+        res.variables = canon.restore(res.variables)
+        return res
 
     def count(self, sparql: str) -> int:
         return self.query(sparql).count
+
+    # --------------------------------------------------------- compilation
+    def _compile_ast(self, ast: SelectQuery, fingerprint: str) -> CompiledQuery:
+        branches = [self._compile_group(g, ast.select)
+                    for g in self._expand_unions(ast.where)]
+        first = branches[0] if branches else None
+        return CompiledQuery(
+            fingerprint=fingerprint, select=list(ast.select),
+            branches=branches,
+            variables=list(first.variables) if first else [],
+            kinds=list(first.kinds) if first else [])
+
+    def _compile_group(self, g: GroupPattern, select: list[str]) -> CompiledBranch:
+        q = build_query_graph(g.triples, self.maps)
+        cheap, expensive = _split_filters(g.filters, q)
+        plan = build_plan(self.graph, q, estimate=self.estimate,
+                          num_filters=cheap,
+                          use_nlf=self.opts.use_nlf, use_deg=self.opts.use_deg)
+        q_all = q
+        optionals: list[CompiledOptional] = []
+        for og in g.optionals:
+            q_ext, _, base_cols = _merge_query(q_all, og.triples, self.maps)
+            cheap_o, exp_o = _split_filters(og.filters, q_ext)
+            ext_plan = _extension_plan(self.graph, q_ext, base_cols, cheap_o,
+                                       self.opts, self.estimate)
+            optionals.append(CompiledOptional(q_ext, base_cols, ext_plan, exp_o))
+            q_all = q_ext
+        variables: list[str] = []
+        kinds: list[str] = []
+        want = select or [v for v in q_all.var_to_vertex] + q_all.pvars
+        for var in want:
+            variables.append(var)
+            kinds.append("vertex" if var in q_all.var_to_vertex
+                         else "predicate" if var in q_all.pvars else "vertex")
+        return CompiledBranch(q=q, plan=plan, expensive=expensive,
+                              optionals=optionals, q_all=q_all,
+                              variables=variables, kinds=kinds)
+
+    # ------------------------------------------------------------ execution
+    def _exec_branch(self, br: CompiledBranch) -> np.ndarray:
+        res = self.executor.run(br.plan)
+        table, ptable = self._apply_expensive(res.bindings, res.pvar_bindings,
+                                              br.q, br.expensive)
+        for co in br.optionals:
+            table, ptable = self._exec_left_join(table, ptable, co)
+        q_all = br.q_all
+        cols: list[np.ndarray] = []
+        for var in br.variables:
+            if var in q_all.var_to_vertex:
+                cols.append(table[:, q_all.var_to_vertex[var]])
+            elif var in q_all.pvars:
+                cols.append(ptable[:, q_all.pvars.index(var)])
+            else:
+                cols.append(np.full(table.shape[0], -1, np.int32))
+        return np.stack(cols, axis=1) if cols else np.zeros(
+            (table.shape[0], 0), np.int32)
 
     # ----------------------------------------------------------- internals
     def _expand_unions(self, g: GroupPattern) -> list[GroupPattern]:
@@ -117,57 +252,10 @@ class SparqlEngine:
             branches = new
         return branches
 
-    def _eval_group(self, g: GroupPattern, select: list[str]):
-        q = build_query_graph(g.triples, self.maps)
-        cheap, expensive = _split_filters(g.filters, q)
-        plan = build_plan(self.graph, q, estimate=self.estimate,
-                          num_filters=cheap,
-                          use_nlf=self.opts.use_nlf, use_deg=self.opts.use_deg)
-        res = self.executor.run(plan)
-        table = res.bindings
-        ptable = res.pvar_bindings
-        # expensive filters on the base table
-        table, ptable = self._apply_expensive(table, ptable, q, expensive)
-
-        # OPTIONAL groups: group-level left join
-        col_offset: dict[str, int] = {}
-        q_all = q
-        for og in g.optionals:
-            table, ptable, q_all = self._left_join(table, ptable, q_all, og)
-
-        # projection
-        variables: list[str] = []
-        kinds: list[str] = []
-        cols: list[np.ndarray] = []
-        want = select or [v for v in q_all.var_to_vertex] + q_all.pvars
-        for var in want:
-            if var in q_all.var_to_vertex:
-                variables.append(var)
-                kinds.append("vertex")
-                cols.append(table[:, q_all.var_to_vertex[var]])
-            elif var in q_all.pvars:
-                variables.append(var)
-                kinds.append("predicate")
-                cols.append(ptable[:, q_all.pvars.index(var)])
-            else:
-                variables.append(var)
-                kinds.append("vertex")
-                cols.append(np.full(table.shape[0], -1, np.int32))
-        rows = np.stack(cols, axis=1) if cols else np.zeros((table.shape[0], 0),
-                                                            np.int32)
-        return rows, q_all, variables, kinds
-
-    def _left_join(self, table: np.ndarray, ptable: np.ndarray,
-                   q_base: QueryGraph, og: GroupPattern):
-        """Left-outer join an OPTIONAL group onto the current table."""
-        # Build a combined query graph: base vars are *seeds* (shared vars
-        # join on them), new vars extend.
-        combined = _merge_query(q_base, og.triples, self.maps)
-        q_ext, new_vertex_map, base_cols = combined
-        cheap, expensive = _split_filters(og.filters, q_ext)
-        # extension plan: steps that bind the new vertices starting from rows
-        plan = _extension_plan(self.graph, q_ext, base_cols, cheap, self.opts,
-                               self.estimate)
+    def _exec_left_join(self, table: np.ndarray, ptable: np.ndarray,
+                        co: CompiledOptional):
+        """Left-outer join a compiled OPTIONAL extension onto the table."""
+        q_ext, plan, expensive = co.q_ext, co.plan, co.expensive
         nq_ext = q_ext.n_vertices
         b0 = np.full((table.shape[0], nq_ext), -1, dtype=np.int32)
         b0[:, : table.shape[1]] = table
@@ -196,7 +284,7 @@ class SparqlEngine:
         un_p[:, : ptable.shape[1]] = ptable[unmatched]
         new_table = np.concatenate([mt, un_b], axis=0)
         new_ptable = np.concatenate([mp, un_p], axis=0)
-        return new_table, new_ptable, q_ext
+        return new_table, new_ptable
 
     def _apply_expensive(self, table, ptable, q: QueryGraph, filters,
                          origins=None):

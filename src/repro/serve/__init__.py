@@ -1,0 +1,60 @@
+"""repro.serve — the concurrent SPARQL serving subsystem.
+
+Layers (bottom-up):
+
+- :mod:`repro.serve.fingerprint` — structural query canonicalization; the
+  cache key that lets alpha-equivalent queries share one compiled plan;
+- :mod:`repro.serve.cache` — bounded LRU plan/result caches with stats;
+- :mod:`repro.serve.metrics` — counters/gauges/histograms + Prometheus text;
+- :mod:`repro.serve.scheduler` — admission control, deadlines, and
+  coalescing of identical in-flight queries over a worker pool;
+- :mod:`repro.serve.server` — multi-dataset registry + stdlib
+  ``ThreadingHTTPServer`` (``/sparql``, ``/healthz``, ``/metrics``).
+
+Submodules are imported lazily so the low-level pieces (``cache``,
+``fingerprint``) stay importable from ``repro.core`` without pulling the
+HTTP stack (which itself imports ``repro.core``) into a cycle.
+"""
+
+from __future__ import annotations
+
+_EXPORTS = {
+    "CanonicalQuery": "repro.serve.fingerprint",
+    "canonicalize_query": "repro.serve.fingerprint",
+    "fingerprint_query": "repro.serve.fingerprint",
+    "serialize_query": "repro.serve.fingerprint",
+    "CacheStats": "repro.serve.cache",
+    "LRUCache": "repro.serve.cache",
+    "PlanCache": "repro.serve.cache",
+    "ResultCache": "repro.serve.cache",
+    "Counter": "repro.serve.metrics",
+    "Gauge": "repro.serve.metrics",
+    "Histogram": "repro.serve.metrics",
+    "MetricsRegistry": "repro.serve.metrics",
+    "ServeMetrics": "repro.serve.metrics",
+    "DeadlineExceeded": "repro.serve.scheduler",
+    "Overloaded": "repro.serve.scheduler",
+    "Scheduler": "repro.serve.scheduler",
+    "SchedulerError": "repro.serve.scheduler",
+    "DatasetRegistry": "repro.serve.server",
+    "HostedDataset": "repro.serve.server",
+    "SparqlHTTPServer": "repro.serve.server",
+    "UnknownDataset": "repro.serve.server",
+    "make_server": "repro.serve.server",
+    "serve_in_thread": "repro.serve.server",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__() -> list[str]:
+    return __all__

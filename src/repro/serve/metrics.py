@@ -1,0 +1,242 @@
+"""Serving metrics: counters, gauges, latency histograms, and a
+Prometheus-style text exposition for the ``/metrics`` endpoint.
+
+Stdlib-only and thread-safe.  Histograms keep fixed cumulative buckets for
+exposition plus a bounded reservoir of recent samples so the CLI can print
+exact p50/p95/p99 over the recent window.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from collections import deque
+
+
+def _fmt_labels(labels: dict[str, str]) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
+class Counter:
+    def __init__(self, name: str, help: str = ""):
+        self.name, self.help = name, help
+        self._values: dict[tuple, float] = {}
+        self._lock = threading.Lock()
+
+    def inc(self, n: float = 1.0, **labels: str) -> None:
+        key = tuple(sorted(labels.items()))
+        with self._lock:
+            self._values[key] = self._values.get(key, 0.0) + n
+
+    def value(self, **labels: str) -> float:
+        key = tuple(sorted(labels.items()))
+        with self._lock:
+            return self._values.get(key, 0.0)
+
+    def total(self) -> float:
+        with self._lock:
+            return sum(self._values.values())
+
+    def render(self) -> list[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} counter"]
+        with self._lock:
+            items = sorted(self._values.items()) or [((), 0.0)]
+        for key, val in items:
+            lines.append(f"{self.name}{_fmt_labels(dict(key))} {val:g}")
+        return lines
+
+
+class Gauge:
+    def __init__(self, name: str, help: str = "", fn=None):
+        self.name, self.help = name, help
+        self._value = 0.0
+        self._fn = fn  # optional callable sampled at render time
+        self._lock = threading.Lock()
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self._value = float(v)
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._value += n
+
+    def dec(self, n: float = 1.0) -> None:
+        self.inc(-n)
+
+    def value(self) -> float:
+        if self._fn is not None:
+            return float(self._fn())
+        with self._lock:
+            return self._value
+
+    def render(self) -> list[str]:
+        return [f"# HELP {self.name} {self.help}",
+                f"# TYPE {self.name} gauge",
+                f"{self.name} {self.value():g}"]
+
+
+DEFAULT_BUCKETS_MS = (0.5, 1, 2.5, 5, 10, 25, 50, 100, 250, 500,
+                      1000, 2500, 5000, 10000, math.inf)
+
+
+class Histogram:
+    """Latency histogram in milliseconds."""
+
+    def __init__(self, name: str, help: str = "",
+                 buckets=DEFAULT_BUCKETS_MS, reservoir: int = 8192):
+        self.name, self.help = name, help
+        self.buckets = tuple(buckets)
+        self._counts = [0] * len(self.buckets)
+        self._sum = 0.0
+        self._count = 0
+        self._recent: deque[float] = deque(maxlen=reservoir)
+        self._lock = threading.Lock()
+
+    def observe(self, ms: float) -> None:
+        with self._lock:
+            self._sum += ms
+            self._count += 1
+            self._recent.append(ms)
+            for i, b in enumerate(self.buckets):
+                if ms <= b:
+                    self._counts[i] += 1
+                    break
+
+    @property
+    def count(self) -> int:
+        with self._lock:
+            return self._count
+
+    def percentile(self, p: float) -> float:
+        """Exact percentile over the recent-sample reservoir."""
+        with self._lock:
+            data = sorted(self._recent)
+        if not data:
+            return float("nan")
+        idx = min(len(data) - 1, max(0, int(round(p / 100.0 * (len(data) - 1)))))
+        return data[idx]
+
+    def summary(self) -> dict:
+        with self._lock:
+            count, total = self._count, self._sum
+        return {"count": count,
+                "mean_ms": (total / count) if count else float("nan"),
+                "p50_ms": self.percentile(50),
+                "p95_ms": self.percentile(95),
+                "p99_ms": self.percentile(99)}
+
+    def render(self) -> list[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} histogram"]
+        with self._lock:
+            counts, total, count = list(self._counts), self._sum, self._count
+        cum = 0
+        for b, c in zip(self.buckets, counts):
+            cum += c
+            le = "+Inf" if math.isinf(b) else f"{b:g}"
+            lines.append(f'{self.name}_bucket{{le="{le}"}} {cum}')
+        lines.append(f"{self.name}_sum {total:g}")
+        lines.append(f"{self.name}_count {count}")
+        return lines
+
+
+class MetricsRegistry:
+    """Holds metrics and renders the Prometheus text exposition."""
+
+    def __init__(self):
+        self._metrics: dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _register(self, metric):
+        with self._lock:
+            if metric.name in self._metrics:
+                raise ValueError(f"duplicate metric {metric.name}")
+            self._metrics[metric.name] = metric
+        return metric
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        with self._lock:
+            m = self._metrics.get(name)
+        return m if m is not None else self._register(Counter(name, help))
+
+    def gauge(self, name: str, help: str = "", fn=None) -> Gauge:
+        with self._lock:
+            m = self._metrics.get(name)
+        return m if m is not None else self._register(Gauge(name, help, fn))
+
+    def histogram(self, name: str, help: str = "", **kw) -> Histogram:
+        with self._lock:
+            m = self._metrics.get(name)
+        return m if m is not None else self._register(Histogram(name, help, **kw))
+
+    def render(self) -> str:
+        with self._lock:
+            metrics = list(self._metrics.values())
+        lines: list[str] = []
+        for m in metrics:
+            lines.extend(m.render())
+        return "\n".join(lines) + "\n"
+
+
+class ServeMetrics:
+    """The serving subsystem's metric bundle (QPS window, latency, caches)."""
+
+    QPS_WINDOW_S = 60.0
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = registry or MetricsRegistry()
+        r = self.registry
+        self.requests = r.counter(
+            "repro_requests_total", "SPARQL requests by dataset and status")
+        self.coalesced = r.counter(
+            "repro_coalesced_total",
+            "requests served by attaching to an identical in-flight query")
+        self.latency = r.histogram(
+            "repro_request_latency_ms", "end-to-end request latency (ms)")
+        self.inflight = r.gauge(
+            "repro_inflight_requests", "requests admitted and not yet done")
+        self.queue_depth = r.gauge(
+            "repro_queue_depth", "flights waiting for a worker")
+        self.qps = r.gauge("repro_qps",
+                           f"completions / s over the last "
+                           f"{int(self.QPS_WINDOW_S)}s", fn=self._qps)
+        self._completions: deque[float] = deque(maxlen=65536)
+        self._started = time.monotonic()
+        self._lock = threading.Lock()
+
+    def record(self, dataset: str, status: str, ms: float) -> None:
+        self.requests.inc(dataset=dataset, status=status)
+        self.latency.observe(ms)
+        with self._lock:
+            self._completions.append(time.monotonic())
+
+    def _qps(self) -> float:
+        now = time.monotonic()
+        with self._lock:
+            n = sum(1 for t in self._completions
+                    if now - t <= self.QPS_WINDOW_S)
+        window = min(self.QPS_WINDOW_S, max(now - self._started, 1e-9))
+        return n / window
+
+    def attach_cache_gauges(self, dataset: str, plan_cache, result_cache) -> None:
+        """Expose a dataset's cache counters as render-time gauges."""
+        r = self.registry
+        for kind, cache in (("plan", plan_cache), ("result", result_cache)):
+            if cache is None:
+                continue
+            for stat in ("hits", "misses", "evictions"):
+                r.gauge(f"repro_{kind}_cache_{stat}_{dataset}",
+                        f"{kind} cache {stat} for dataset {dataset}",
+                        fn=lambda c=cache, s=stat: getattr(c.stats, s))
+
+    def summary(self) -> dict:
+        return {"requests": self.requests.total(),
+                "coalesced": self.coalesced.total(),
+                "qps": round(self._qps(), 2),
+                **self.latency.summary()}

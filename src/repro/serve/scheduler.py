@@ -1,0 +1,216 @@
+"""Thread-based request scheduler with admission control and micro-batching.
+
+Requests are canonicalized on the submitting thread (cheap, pure-Python)
+and keyed ``(dataset, fingerprint, graph_version)``.  Concurrent requests
+with the same key *coalesce*: one flight executes, every waiter gets the
+shared result with its own variable names restored — the serving-layer
+analogue of the engine's shared-plan compilation, applied to execution.
+
+Admission control bounds the number of queued flights (excess submissions
+fail fast with :class:`Overloaded`) and every request carries a deadline:
+waiters stop waiting when it passes, and a flight that is still queued past
+its deadline is dropped without executing.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.core.sparql_exec import QueryResult
+from repro.rdf.sparql import SelectQuery, parse_sparql
+from repro.serve.fingerprint import CanonicalQuery, canonicalize_query
+from repro.serve.metrics import ServeMetrics
+from repro.utils import get_logger
+
+log = get_logger("serve.scheduler")
+
+
+class SchedulerError(RuntimeError):
+    pass
+
+
+class Overloaded(SchedulerError):
+    """Admission control rejected the request (queue full)."""
+
+
+class DeadlineExceeded(SchedulerError):
+    """The request's deadline passed before a result was ready."""
+
+
+class SchedulerStopped(SchedulerError):
+    """submit() called on a scheduler that is not running."""
+
+
+@dataclass
+class _Flight:
+    key: tuple
+    dataset: str
+    canonical: CanonicalQuery
+    version: int
+    deadline: float  # absolute monotonic; max over attached waiters
+    done: threading.Event = field(default_factory=threading.Event)
+    result: QueryResult | None = None
+    error: Exception | None = None
+    waiters: int = 1
+
+
+_SENTINEL = object()
+
+
+class Scheduler:
+    """Request queue + worker pool in front of a dataset registry.
+
+    ``registry`` needs two methods: ``version(dataset) -> int`` and
+    ``execute_canonical(dataset, canonical, version) -> QueryResult`` (see
+    :class:`repro.serve.server.DatasetRegistry`).
+    """
+
+    def __init__(self, registry, *, workers: int = 4, max_queue: int = 64,
+                 default_timeout_s: float = 30.0,
+                 metrics: ServeMetrics | None = None):
+        if workers < 1:
+            raise ValueError("workers must be >= 1")
+        self.registry = registry
+        self.max_queue = max_queue
+        self.default_timeout_s = default_timeout_s
+        self.metrics = metrics or ServeMetrics()
+        self._queue: queue.Queue = queue.Queue()
+        self._inflight: dict[tuple, _Flight] = {}
+        self._lock = threading.Lock()
+        self._threads: list[threading.Thread] = []
+        self._running = False
+        self._n_workers = workers
+
+    # ---------------------------------------------------------- lifecycle
+    def start(self) -> "Scheduler":
+        with self._lock:
+            if self._running:
+                return self
+            self._running = True
+        for i in range(self._n_workers):
+            t = threading.Thread(target=self._worker, daemon=True,
+                                 name=f"serve-worker-{i}")
+            t.start()
+            self._threads.append(t)
+        return self
+
+    def stop(self, wait: bool = True) -> None:
+        with self._lock:
+            if not self._running:
+                return
+            self._running = False
+        for _ in self._threads:
+            self._queue.put(_SENTINEL)
+        if wait:
+            for t in self._threads:
+                t.join(timeout=5.0)
+        self._threads.clear()
+
+    def __enter__(self) -> "Scheduler":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------- submit
+    def submit(self, dataset: str, query: str | SelectQuery | CanonicalQuery,
+               timeout_s: float | None = None) -> QueryResult:
+        """Execute (or join) a query; returns bindings with the caller's
+        variable names.  Raises ``Overloaded`` / ``DeadlineExceeded`` /
+        parse and plan errors from the engine."""
+        if not self._running:
+            raise SchedulerStopped("scheduler is not running; call start()")
+        t0 = time.perf_counter()
+        if isinstance(query, CanonicalQuery):
+            canon = query
+        else:
+            ast = parse_sparql(query) if isinstance(query, str) else query
+            canon = canonicalize_query(ast)
+        version = self.registry.version(dataset)
+        timeout = self.default_timeout_s if timeout_s is None else timeout_s
+        deadline = time.monotonic() + timeout
+        key = (dataset, canon.fingerprint, version)
+
+        with self._lock:
+            flight = self._inflight.get(key)
+            if flight is not None and not flight.done.is_set():
+                flight.waiters += 1
+                flight.deadline = max(flight.deadline, deadline)
+                self.metrics.coalesced.inc()
+                coalesced = True
+            else:
+                if self._queue.qsize() >= self.max_queue:
+                    self.metrics.record(dataset, "overloaded",
+                                        (time.perf_counter() - t0) * 1e3)
+                    raise Overloaded(
+                        f"queue full ({self.max_queue} flights pending)")
+                flight = _Flight(key=key, dataset=dataset, canonical=canon,
+                                 version=version, deadline=deadline)
+                self._inflight[key] = flight
+                self._queue.put(flight)
+                coalesced = False
+        self.metrics.inflight.inc()
+        self.metrics.queue_depth.set(self._queue.qsize())
+        try:
+            finished = flight.done.wait(max(0.0, deadline - time.monotonic()))
+            ms = (time.perf_counter() - t0) * 1e3
+            if not finished:
+                self.metrics.record(dataset, "timeout", ms)
+                raise DeadlineExceeded(
+                    f"no result within {timeout:.3f}s "
+                    f"({'coalesced' if coalesced else 'leader'})")
+            if flight.error is not None:
+                status = ("timeout" if isinstance(flight.error,
+                                                  DeadlineExceeded) else "error")
+                self.metrics.record(dataset, status, ms)
+                raise flight.error
+            self.metrics.record(dataset, "ok", ms)
+            res = flight.result
+            assert res is not None
+            return QueryResult(canon.restore(res.variables), res.rows,
+                               list(res.kinds), count=res.count,
+                               stats=dict(res.stats))
+        finally:
+            self.metrics.inflight.dec()
+
+    # ------------------------------------------------------------- worker
+    def _worker(self) -> None:
+        while True:
+            flight = self._queue.get()
+            if flight is _SENTINEL:
+                return
+            self.metrics.queue_depth.set(self._queue.qsize())
+            # expiry check and de-registration are atomic with submit's
+            # attach/deadline-extend, so no request can coalesce onto a
+            # flight that is about to be declared dead
+            with self._lock:
+                expired = time.monotonic() > flight.deadline
+                if expired:
+                    self._inflight.pop(flight.key, None)
+            if expired:
+                flight.error = DeadlineExceeded(
+                    "expired while queued (admission backlog)")
+                flight.done.set()
+                continue
+            err: Exception | None = None
+            result = None
+            try:
+                result = self.registry.execute_canonical(
+                    flight.dataset, flight.canonical, flight.version)
+            except Exception as e:  # noqa: BLE001 — fan the error out
+                err = e
+            with self._lock:
+                self._inflight.pop(flight.key, None)
+            flight.result, flight.error = result, err
+            flight.done.set()
+
+    # -------------------------------------------------------------- stats
+    def snapshot(self) -> dict:
+        with self._lock:
+            inflight = len(self._inflight)
+        return {"inflight": inflight, "queued": self._queue.qsize(),
+                "workers": self._n_workers, "max_queue": self.max_queue,
+                **self.metrics.summary()}

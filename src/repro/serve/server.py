@@ -1,0 +1,310 @@
+"""Multi-dataset SPARQL HTTP service over the paper's engine.
+
+``DatasetRegistry`` hosts several transformed graphs (lubm / bsbm / hetero
+/ loaded N-Triples) behind one process: each dataset gets its own
+``SparqlEngine`` with a fingerprint-keyed plan cache, an optional result
+cache keyed ``(fingerprint, graph_version)``, and a version counter whose
+bump is the explicit invalidation point for cached results.
+
+``SparqlHTTPServer`` is a stdlib ``ThreadingHTTPServer`` exposing
+
+- ``GET/POST /sparql`` — ``query`` + optional ``dataset``/``limit``/
+  ``timeout_ms`` parameters (query string, form body, JSON body, or raw
+  ``application/sparql-query``), answering SPARQL-JSON-style bindings;
+- ``GET /healthz`` — liveness + hosted datasets;
+- ``GET /metrics`` — Prometheus text exposition.
+
+Requests flow through the :class:`~repro.serve.scheduler.Scheduler`, so
+identical concurrent queries coalesce and overload returns 503 rather than
+piling onto the engine.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+from dataclasses import dataclass, field
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlparse
+
+from repro.core.exec import ExecOpts
+from repro.core.plan import PlanError
+from repro.core.query import QueryBuildError
+from repro.core.sparql_exec import QueryResult, SparqlEngine
+from repro.rdf.sparql import SparqlError
+from repro.serve.cache import PlanCache, ResultCache
+from repro.serve.fingerprint import CanonicalQuery
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import (DeadlineExceeded, Overloaded, Scheduler,
+                                   SchedulerError)
+from repro.utils import get_logger
+
+log = get_logger("serve.server")
+
+
+class UnknownDataset(KeyError):
+    pass
+
+
+@dataclass
+class HostedDataset:
+    name: str
+    graph: object
+    maps: object
+    engine: SparqlEngine
+    result_cache: ResultCache
+    version: int = 0
+    lock: threading.Lock = field(default_factory=threading.Lock)
+
+
+class DatasetRegistry:
+    """Named graphs + engines, the unit the scheduler executes against."""
+
+    def __init__(self, metrics: ServeMetrics | None = None, *,
+                 plan_cache_size: int = 256, result_cache_size: int = 0):
+        self.metrics = metrics or ServeMetrics()
+        self._default_plan_cache_size = plan_cache_size
+        self._default_result_cache_size = result_cache_size
+        self._datasets: dict[str, HostedDataset] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- hosting
+    def register(self, name: str, graph, maps, opts: ExecOpts | None = None,
+                 *, plan_cache_size: int | None = None,
+                 result_cache_size: int | None = None) -> HostedDataset:
+        plan_cache = PlanCache(self._default_plan_cache_size
+                               if plan_cache_size is None else plan_cache_size)
+        result_cache = ResultCache(self._default_result_cache_size
+                                   if result_cache_size is None
+                                   else result_cache_size)
+        engine = SparqlEngine(graph, maps, opts, plan_cache=plan_cache)
+        ds = HostedDataset(name=name, graph=graph, maps=maps, engine=engine,
+                           result_cache=result_cache)
+        with self._lock:
+            self._datasets[name] = ds
+        self.metrics.attach_cache_gauges(name, plan_cache, result_cache)
+        return ds
+
+    def get(self, name: str) -> HostedDataset:
+        with self._lock:
+            ds = self._datasets.get(name)
+        if ds is None:
+            raise UnknownDataset(name)
+        return ds
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._datasets)
+
+    def default_name(self) -> str:
+        names = self.names()
+        if not names:
+            raise UnknownDataset("registry is empty")
+        return names[0]
+
+    def version(self, name: str) -> int:
+        return self.get(name).version
+
+    def invalidate(self, name: str) -> int:
+        """Bump a dataset's graph version; retire its cached results.
+        Call after mutating/reloading the graph in place."""
+        ds = self.get(name)
+        with ds.lock:
+            stale = ds.version
+            ds.version += 1
+        return ds.result_cache.invalidate(stale)
+
+    # ----------------------------------------------------------- execution
+    def execute_canonical(self, name: str, canon: CanonicalQuery,
+                          version: int) -> QueryResult:
+        """Execute over canonical variable names (scheduler entry point)."""
+        ds = self.get(name)
+        key = (canon.fingerprint, version)
+        if ds.result_cache.enabled:
+            hit = ds.result_cache.get(key)
+            if hit is not None:
+                return hit
+        compiled = ds.engine.compile_canonical(canon)
+        res = ds.engine.execute_compiled(compiled)
+        if ds.result_cache.enabled and version == ds.version:
+            ds.result_cache.put(key, res)
+        return res
+
+    def execute(self, name: str, sparql: str) -> QueryResult:
+        """Scheduler-less convenience path (tests, CLIs)."""
+        from repro.serve.fingerprint import canonicalize_query
+        from repro.rdf.sparql import parse_sparql
+
+        canon = canonicalize_query(parse_sparql(sparql))
+        res = self.execute_canonical(name, canon, self.version(name))
+        return QueryResult(canon.restore(res.variables), res.rows,
+                           list(res.kinds), count=res.count)
+
+    def decode(self, name: str, res: QueryResult,
+               limit: int | None = None) -> list[dict]:
+        return res.decode(self.get(name).maps, limit=limit)
+
+    def stats(self) -> dict:
+        out = {}
+        for name in self.names():
+            ds = self.get(name)
+            out[name] = {
+                "vertices": int(ds.graph.n_vertices),
+                "edges": int(ds.graph.n_edges),
+                "version": ds.version,
+                "plan_cache": ds.engine.plan_cache.snapshot(),
+                "result_cache": ds.result_cache.snapshot(),
+            }
+        return out
+
+
+# ------------------------------------------------------------------- HTTP
+def _bindings_json(registry: DatasetRegistry, dataset: str, res: QueryResult,
+                   limit: int | None) -> dict:
+    rows = registry.decode(dataset, res, limit=limit)
+    bindings = []
+    for rec in rows:
+        b = {}
+        for var, term in rec.items():
+            if term is None:
+                continue
+            kind = "literal" if term.startswith('"') else "uri"
+            b[var] = {"type": kind, "value": term.strip('"')}
+        bindings.append(b)
+    return {"head": {"vars": list(res.variables)},
+            "results": {"bindings": bindings},
+            "stats": {"count": res.count, "returned": len(bindings)}}
+
+
+class _Handler(BaseHTTPRequestHandler):
+    server: "SparqlHTTPServer"  # type: ignore[assignment]
+    protocol_version = "HTTP/1.1"
+
+    # ------------------------------------------------------------- plumbing
+    def log_message(self, fmt: str, *args) -> None:  # route to our logger
+        log.debug("%s %s", self.address_string(), fmt % args)
+
+    def _send(self, code: int, body: bytes, ctype: str) -> None:
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_json(self, code: int, obj: dict) -> None:
+        self._send(code, json.dumps(obj).encode(),
+                   "application/json; charset=utf-8")
+
+    def _error(self, code: int, message: str) -> None:
+        self._send_json(code, {"error": message})
+
+    # ------------------------------------------------------------ endpoints
+    def do_GET(self) -> None:  # noqa: N802 (http.server naming)
+        url = urlparse(self.path)
+        if url.path == "/healthz":
+            self._send_json(200, {"status": "ok",
+                                  "datasets": self.server.registry.stats()})
+        elif url.path == "/metrics":
+            text = self.server.metrics.registry.render()
+            self._send(200, text.encode(), "text/plain; version=0.0.4")
+        elif url.path == "/sparql":
+            params = {k: v[-1] for k, v in parse_qs(url.query).items()}
+            self._handle_sparql(params)
+        else:
+            self._error(404, f"no such endpoint: {url.path}")
+
+    def do_POST(self) -> None:  # noqa: N802
+        url = urlparse(self.path)
+        if url.path != "/sparql":
+            self._error(404, f"no such endpoint: {url.path}")
+            return
+        length = int(self.headers.get("Content-Length") or 0)
+        raw = self.rfile.read(length) if length else b""
+        ctype = (self.headers.get("Content-Type") or "").split(";")[0].strip()
+        params = {k: v[-1] for k, v in parse_qs(url.query).items()}
+        try:
+            if ctype == "application/json":
+                obj = json.loads(raw.decode() or "{}")
+                if not isinstance(obj, dict):
+                    self._error(400, "JSON body must be an object")
+                    return
+                params.update(obj)
+            elif ctype == "application/x-www-form-urlencoded":
+                params.update({k: v[-1]
+                               for k, v in parse_qs(raw.decode()).items()})
+            elif raw.strip():  # sparql-query / text/plain / none: raw query
+                params["query"] = raw.decode()
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            self._error(400, f"bad request body: {e}")
+            return
+        self._handle_sparql(params)
+
+    def _handle_sparql(self, params: dict) -> None:
+        query = params.get("query")
+        if not query:
+            self._error(400, "missing 'query' parameter")
+            return
+        registry = self.server.registry
+        try:
+            dataset = params.get("dataset") or registry.default_name()
+            limit = int(params["limit"]) if "limit" in params else None
+            timeout_s = (float(params["timeout_ms"]) / 1e3
+                         if "timeout_ms" in params else None)
+        except (ValueError, UnknownDataset) as e:
+            self._error(400, str(e))
+            return
+        try:
+            res = self.server.scheduler.submit(dataset, query,
+                                               timeout_s=timeout_s)
+        except UnknownDataset as e:
+            self._error(404, f"unknown dataset: {e}")
+        except (SparqlError, QueryBuildError, PlanError) as e:
+            self._error(400, str(e))
+        except Overloaded as e:
+            self._error(503, str(e))
+        except DeadlineExceeded as e:
+            self._error(504, str(e))
+        except SchedulerError as e:
+            self._error(500, str(e))
+        except Exception as e:  # noqa: BLE001 — never kill the handler thread
+            log.exception("internal error serving query")
+            self._error(500, f"internal error: {e}")
+        else:
+            self._send_json(200, _bindings_json(registry, dataset, res, limit))
+
+
+class SparqlHTTPServer(ThreadingHTTPServer):
+    """ThreadingHTTPServer bound to a registry + scheduler."""
+
+    daemon_threads = True
+
+    def __init__(self, address: tuple[str, int], registry: DatasetRegistry,
+                 scheduler: Scheduler):
+        super().__init__(address, _Handler)
+        self.registry = registry
+        self.scheduler = scheduler
+        self.metrics = scheduler.metrics
+
+
+def make_server(registry: DatasetRegistry, host: str = "127.0.0.1",
+                port: int = 0, *, workers: int = 4, max_queue: int = 64,
+                default_timeout_s: float = 30.0,
+                scheduler: Scheduler | None = None) -> SparqlHTTPServer:
+    """Build (and start the scheduler of) a ready-to-serve HTTP server.
+    ``port=0`` binds an ephemeral port (see ``server.server_address``)."""
+    if scheduler is None:
+        scheduler = Scheduler(registry, workers=workers, max_queue=max_queue,
+                              default_timeout_s=default_timeout_s,
+                              metrics=registry.metrics)
+    scheduler.start()
+    server = SparqlHTTPServer((host, port), registry, scheduler)
+    log.info("sparql service on http://%s:%d/sparql (datasets: %s)",
+             *server.server_address[:2], ",".join(registry.names()) or "-")
+    return server
+
+
+def serve_in_thread(server: SparqlHTTPServer) -> threading.Thread:
+    t = threading.Thread(target=server.serve_forever, daemon=True,
+                         name="sparql-http")
+    t.start()
+    return t

@@ -1,3 +1,4 @@
+import repro.utils.compat  # noqa: F401  (installs jax version shims)
 from repro.utils.logging import get_logger
 from repro.utils.timing import Timer, timed
 

@@ -1,0 +1,37 @@
+"""jax version-compatibility shims.
+
+The codebase is written against the jax>=0.5 public names ``jax.shard_map``
+and ``jax.set_mesh``.  On older jax (0.4.x) those live elsewhere:
+
+- ``shard_map``: ``jax.experimental.shard_map.shard_map``;
+- ``set_mesh``: no equivalent, but ``Mesh`` is itself a context manager
+  with the same ambient-mesh effect, so ``with jax.set_mesh(mesh):``
+  degrades to ``with mesh:``.
+
+Importing this module (repro.utils does it on package import) installs the
+missing names onto ``jax`` so every call site — including test subprocesses
+that only import repro — runs on either version unchanged.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def _shard_map(f, *args, **kwargs):
+        # jax>=0.5 calls it check_vma; 0.4.x cannot express unchecked P()
+        # outputs (check_rep=False rejects them), so always run checked
+        kwargs.pop("check_vma", None)
+        return _exp_shard_map(f, *args, **kwargs)
+
+    jax.shard_map = _shard_map
+
+if not hasattr(jax, "set_mesh"):
+    def _set_mesh(mesh):
+        # new-jax set_mesh returns a context manager; a 0.4.x Mesh already
+        # is one (enter = make ambient), so pass it straight through
+        return mesh
+
+    jax.set_mesh = _set_mesh

@@ -12,7 +12,7 @@ import pytest
 
 from repro.analysis.model_flops import model_flops
 from repro.analysis.roofline import (_combine, _sub, roofline_terms,
-                                     to_markdown)
+                                     to_markdown, xla_cost)
 from repro.launch.dryrun import _shape_bytes, collective_bytes
 
 REPO = Path(__file__).resolve().parent.parent
@@ -34,8 +34,8 @@ def test_xla_counts_scan_body_once():
     x = jax.ShapeDtypeStruct((d, d), jnp.float32)
     w = jax.ShapeDtypeStruct((d, d), jnp.float32)
     ws = jax.ShapeDtypeStruct((4, d, d), jnp.float32)
-    c1 = jax.jit(one).lower(x, w).compile().cost_analysis()["flops"]
-    c4 = jax.jit(scanned).lower(x, ws).compile().cost_analysis()["flops"]
+    c1 = xla_cost(jax.jit(one).lower(x, w).compile())["flops"]
+    c4 = xla_cost(jax.jit(scanned).lower(x, ws).compile())["flops"]
     assert c4 == pytest.approx(c1, rel=0.01)
 
 

@@ -9,8 +9,8 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from conftest import given, settings, st
 
 import jax.numpy as jnp
 

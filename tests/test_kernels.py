@@ -4,8 +4,8 @@ expansion primitive."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from conftest import given, settings, st
 
 import jax
 import jax.numpy as jnp

@@ -4,8 +4,8 @@ LabeledGraph structures, and hypothesis property tests."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from conftest import given, settings, st
 
 from repro.rdf.dictionary import RDF_TYPE, RDFS_SUBCLASSOF, Dictionary
 from repro.rdf.graph import LabeledGraph, pack_bitmap

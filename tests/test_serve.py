@@ -1,0 +1,450 @@
+"""Serving subsystem tests: fingerprint equivalence, LRU/result caches,
+engine plan-cache sharing, scheduler coalescing/deadlines/admission, and an
+end-to-end HTTP round-trip with concurrent clients."""
+
+import json
+import threading
+import time
+import urllib.error
+import urllib.request
+from urllib.parse import urlencode
+
+import numpy as np
+import pytest
+
+from repro.core import SparqlEngine
+from repro.core.sparql_exec import QueryResult
+from repro.rdf.sparql import parse_sparql
+from repro.rdf.workloads import BSBM_QUERIES, LUBM_QUERIES
+from repro.serve.cache import LRUCache, ResultCache
+from repro.serve.fingerprint import canonicalize_query, fingerprint_query
+from repro.serve.metrics import Histogram, MetricsRegistry, ServeMetrics
+from repro.serve.scheduler import (DeadlineExceeded, Overloaded, Scheduler,
+                                   SchedulerStopped)
+from repro.serve.server import (DatasetRegistry, UnknownDataset, make_server,
+                                serve_in_thread)
+
+Q2_RENAMED_REORDERED = """
+    SELECT ?a ?b ?c WHERE {
+      ?a ub:undergraduateDegreeFrom ?b .
+      ?c rdf:type ub:Department .
+      ?a rdf:type ub:GraduateStudent .
+      ?a ub:memberOf ?c .
+      ?b rdf:type ub:University .
+      ?c ub:subOrganizationOf ?b .
+    }"""
+
+
+# ------------------------------------------------------------- fingerprint
+def test_fingerprint_alpha_renaming_and_reorder():
+    assert fingerprint_query(LUBM_QUERIES["Q2"]) == \
+        fingerprint_query(Q2_RENAMED_REORDERED)
+
+
+def test_fingerprint_whitespace_and_prefix_invariance():
+    a = "SELECT ?x WHERE { ?x rdf:type ub:Student . }"
+    b = """PREFIX ub: <http://example.org/univ#>
+           SELECT   ?y
+           WHERE {
+             ?y    rdf:type    ub:Student
+           }"""
+    assert fingerprint_query(a) == fingerprint_query(b)
+
+
+def test_fingerprint_distinguishes_structure():
+    fps = {name: fingerprint_query(q) for name, q in LUBM_QUERIES.items()}
+    assert len(set(fps.values())) == len(fps)  # no two LUBM queries collide
+    # same shape, different constant
+    a = "SELECT ?x WHERE { ?x ub:takesCourse ub:CourseA . }"
+    b = "SELECT ?x WHERE { ?x ub:takesCourse ub:CourseB . }"
+    assert fingerprint_query(a) != fingerprint_query(b)
+    # extra triple changes the fingerprint
+    c = "SELECT ?x WHERE { ?x ub:takesCourse ub:CourseA . ?x rdf:type ub:Student . }"
+    assert fingerprint_query(a) != fingerprint_query(c)
+
+
+def test_fingerprint_select_order_matters():
+    a = "SELECT ?x ?y WHERE { ?x ub:advisor ?y . }"
+    b = "SELECT ?y ?x WHERE { ?x ub:advisor ?y . }"
+    assert fingerprint_query(a) != fingerprint_query(b)
+
+
+def test_fingerprint_symmetric_variables_correctness():
+    # WL-symmetric star: any bijective renaming is correct even if sharing
+    # is best-effort; canonicalization must stay deterministic
+    q = "SELECT ?a ?b WHERE { ?c ub:knows ?a . ?c ub:knows ?b . }"
+    assert fingerprint_query(q) == fingerprint_query(q)
+    canon = canonicalize_query(parse_sparql(q))
+    assert sorted(canon.rename) == ["a", "b", "c"]
+    assert len(set(canon.rename.values())) == 3
+
+
+def test_fingerprint_filter_optional_union():
+    b3 = BSBM_QUERIES.get("B3")
+    if b3 is not None:
+        assert fingerprint_query(b3) == fingerprint_query(b3)
+    a = """SELECT ?p WHERE {
+        ?p rdf:type bsbm:Product .
+        ?p bsbm:productPropertyNumeric1 ?v . FILTER (?v > 100)
+        OPTIONAL { ?p bsbm:productPropertyTextual1 ?t . } }"""
+    b = """SELECT ?q WHERE {
+        OPTIONAL { ?q bsbm:productPropertyTextual1 ?u . }
+        ?q bsbm:productPropertyNumeric1 ?w . FILTER (?w > 100)
+        ?q rdf:type bsbm:Product . }"""
+    assert fingerprint_query(a) == fingerprint_query(b)
+    c = a.replace("> 100", "> 200")
+    assert fingerprint_query(a) != fingerprint_query(c)
+
+
+def test_fingerprint_optional_order_is_significant():
+    # OPTIONAL left-joins chain: a later group may seed off variables bound
+    # by an earlier one, so swapped OPTIONALs must NOT share a fingerprint
+    a = """SELECT ?w WHERE { ?x rdf:type ub:A .
+        OPTIONAL { ?x ub:p ?z . } OPTIONAL { ?z ub:q ?w . } }"""
+    b = """SELECT ?w WHERE { ?x rdf:type ub:A .
+        OPTIONAL { ?z ub:q ?w . } OPTIONAL { ?x ub:p ?z . } }"""
+    assert fingerprint_query(a) != fingerprint_query(b)
+
+
+def test_canonicalize_restores_caller_variables():
+    canon = canonicalize_query(parse_sparql(Q2_RENAMED_REORDERED))
+    restored = canon.restore([canon.rename[v] for v in ("a", "b", "c")])
+    assert restored == ["a", "b", "c"]
+
+
+# -------------------------------------------------------------------- LRU
+def test_lru_eviction_order_and_stats():
+    c = LRUCache(capacity=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1        # refresh a
+    c.put("c", 3)                 # evicts b (least recent)
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    assert c.stats.evictions == 1
+    assert c.stats.hits == 3 and c.stats.misses == 1
+    assert len(c) == 2
+    snap = c.snapshot()
+    assert snap["size"] == 2 and snap["capacity"] == 2
+    assert 0.0 < snap["hit_rate"] < 1.0
+
+
+def test_lru_disabled_at_zero_capacity():
+    c = LRUCache(capacity=0)
+    c.put("a", 1)
+    assert not c.enabled and c.get("a") is None and len(c) == 0
+
+
+def test_result_cache_version_invalidation():
+    rc = ResultCache(capacity=8)
+    r = QueryResult(["x"], np.zeros((1, 1), np.int32), ["vertex"], count=1)
+    rc.put(("fp1", 0), r)
+    rc.put(("fp2", 0), r)
+    rc.put(("fp1", 1), r)
+    assert rc.invalidate(0) == 2
+    assert rc.peek(("fp1", 0)) is None
+    assert rc.peek(("fp1", 1)) is r
+    assert rc.stats.invalidations == 2
+
+
+def test_result_cache_row_cap():
+    rc = ResultCache(capacity=8, max_result_rows=10)
+    big = QueryResult(["x"], np.zeros((11, 1), np.int32), ["vertex"], count=11)
+    rc.put(("fp", 0), big)
+    assert rc.peek(("fp", 0)) is None
+
+
+# ---------------------------------------------------------------- metrics
+def test_histogram_percentiles_and_render():
+    h = Histogram("test_latency_ms")
+    for v in range(1, 101):
+        h.observe(float(v))
+    assert h.percentile(50) == pytest.approx(50, abs=2)
+    assert h.percentile(99) == pytest.approx(99, abs=2)
+    text = "\n".join(h.render())
+    assert 'test_latency_ms_bucket{le="+Inf"} 100' in text
+    assert "test_latency_ms_count 100" in text
+
+
+def test_metrics_registry_render():
+    reg = MetricsRegistry()
+    reg.counter("c_total", "a counter").inc(2, dataset="x")
+    reg.gauge("g", "a gauge").set(1.5)
+    out = reg.render()
+    assert 'c_total{dataset="x"} 2' in out
+    assert "# TYPE c_total counter" in out
+    assert "g 1.5" in out
+
+
+# -------------------------------------------------- scheduler (stub registry)
+class _StubRegistry:
+    """Registry double whose execution blocks until released."""
+
+    def __init__(self):
+        self.release = threading.Event()
+        self.calls = []
+        self.lock = threading.Lock()
+        self.block = False
+
+    def version(self, name):
+        if name == "missing":
+            raise UnknownDataset(name)
+        return 0
+
+    def execute_canonical(self, name, canon, version):
+        with self.lock:
+            self.calls.append(canon.fingerprint)
+        if self.block and not self.release.wait(10.0):
+            raise RuntimeError("stub never released")
+        variables = canon.query.select or ["v0"]
+        rows = np.arange(len(variables), dtype=np.int32)[None, :]
+        return QueryResult(list(variables), rows,
+                           ["vertex"] * len(variables), count=1)
+
+
+def test_scheduler_coalesces_identical_fingerprints():
+    reg = _StubRegistry()
+    reg.block = True
+    sched = Scheduler(reg, workers=2, metrics=ServeMetrics()).start()
+    try:
+        results, errors = [], []
+
+        def client(q):
+            try:
+                results.append(sched.submit("d", q, timeout_s=10.0))
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+
+        q1 = "SELECT ?x ?y WHERE { ?x ub:advisor ?y . }"
+        q2 = "SELECT ?a ?b WHERE { ?a ub:advisor ?b . }"  # alpha-equivalent
+        threads = [threading.Thread(target=client, args=(q,))
+                   for q in (q1, q2, q1, q2)]
+        for t in threads:
+            t.start()
+        deadline = time.time() + 5.0  # wait until all four are attached
+        while sched.metrics.coalesced.total() < 3 and time.time() < deadline:
+            time.sleep(0.01)
+        reg.release.set()
+        for t in threads:
+            t.join(timeout=10.0)
+        assert not errors
+        assert len(results) == 4
+        assert len(reg.calls) == 1  # one execution for four requests
+        assert sched.metrics.coalesced.total() == 3
+        # each caller got its own variable names back
+        names = sorted(tuple(r.variables) for r in results)
+        assert names == sorted([("x", "y"), ("a", "b"), ("x", "y"), ("a", "b")])
+    finally:
+        reg.release.set()
+        sched.stop()
+
+
+def test_scheduler_distinct_queries_do_not_coalesce():
+    reg = _StubRegistry()
+    sched = Scheduler(reg, workers=2, metrics=ServeMetrics()).start()
+    try:
+        sched.submit("d", "SELECT ?x WHERE { ?x rdf:type ub:Student . }")
+        sched.submit("d", "SELECT ?x WHERE { ?x rdf:type ub:Course . }")
+        assert len(set(reg.calls)) == 2
+        assert sched.metrics.coalesced.total() == 0
+    finally:
+        sched.stop()
+
+
+def test_scheduler_deadline_exceeded():
+    reg = _StubRegistry()
+    reg.block = True
+    sched = Scheduler(reg, workers=1, metrics=ServeMetrics()).start()
+    try:
+        with pytest.raises(DeadlineExceeded):
+            sched.submit("d", "SELECT ?x WHERE { ?x rdf:type ub:A . }",
+                         timeout_s=0.15)
+        assert sched.metrics.requests.value(dataset="d", status="timeout") == 1
+    finally:
+        reg.release.set()
+        sched.stop()
+
+
+def test_scheduler_admission_control_overload():
+    reg = _StubRegistry()
+    reg.block = True
+    sched = Scheduler(reg, workers=1, max_queue=1,
+                      metrics=ServeMetrics()).start()
+    try:
+        occupy = threading.Thread(
+            target=lambda: sched.submit(
+                "d", "SELECT ?x WHERE { ?x rdf:type ub:A . }", timeout_s=10.0))
+        occupy.start()
+        deadline = time.time() + 5.0
+        while not reg.calls and time.time() < deadline:
+            time.sleep(0.01)  # worker now blocked inside the stub
+        queued = threading.Thread(
+            target=lambda: sched.submit(
+                "d", "SELECT ?x WHERE { ?x rdf:type ub:B . }", timeout_s=10.0))
+        queued.start()
+        deadline = time.time() + 5.0
+        while sched._queue.qsize() < 1 and time.time() < deadline:
+            time.sleep(0.01)
+        with pytest.raises(Overloaded):
+            sched.submit("d", "SELECT ?x WHERE { ?x rdf:type ub:C . }")
+        reg.release.set()
+        occupy.join(timeout=10.0)
+        queued.join(timeout=10.0)
+    finally:
+        reg.release.set()
+        sched.stop()
+
+
+def test_scheduler_requires_start_and_propagates_unknown_dataset():
+    reg = _StubRegistry()
+    sched = Scheduler(reg, workers=1, metrics=ServeMetrics())
+    with pytest.raises(SchedulerStopped):
+        sched.submit("d", "SELECT ?x WHERE { ?x rdf:type ub:A . }")
+    with sched:
+        with pytest.raises(UnknownDataset):
+            sched.submit("missing", "SELECT ?x WHERE { ?x rdf:type ub:A . }")
+
+
+# ------------------------------------------------- engine plan-cache sharing
+def test_engine_plan_cache_shares_alpha_equivalent_plans(lubm_graph):
+    g, maps = lubm_graph
+    engine = SparqlEngine(g, maps)
+    r1 = engine.query(LUBM_QUERIES["Q2"])
+    r2 = engine.query(Q2_RENAMED_REORDERED)
+    stats = engine.plan_cache.stats
+    assert stats.misses == 1 and stats.hits == 1  # exactly one plan compiled
+    assert len(engine.plan_cache) == 1
+    assert r1.count == r2.count
+    assert r1.variables == ["x", "y", "z"]
+    assert r2.variables == ["a", "b", "c"]
+    assert np.array_equal(np.sort(r1.rows, axis=0), np.sort(r2.rows, axis=0))
+
+
+def test_registry_result_cache_and_invalidation(lubm_graph):
+    g, maps = lubm_graph
+    registry = DatasetRegistry(result_cache_size=16)
+    registry.register("lubm", g, maps)
+    r1 = registry.execute("lubm", LUBM_QUERIES["Q1"])
+    r2 = registry.execute("lubm", LUBM_QUERIES["Q1"])
+    ds = registry.get("lubm")
+    assert ds.result_cache.stats.hits == 1
+    assert r1.count == r2.count
+    # alpha-equivalent query hits the same cached result
+    renamed = LUBM_QUERIES["Q1"].replace("?x", "?who")
+    r3 = registry.execute("lubm", renamed)
+    assert ds.result_cache.stats.hits == 2
+    assert r3.variables == ["who"] and r3.count == r1.count
+    # explicit invalidation: version bump retires the cached entry
+    assert registry.invalidate("lubm") == 1
+    registry.execute("lubm", LUBM_QUERIES["Q1"])
+    assert ds.result_cache.stats.hits == 2  # miss after invalidation
+
+
+# --------------------------------------------------------------- HTTP e2e
+@pytest.fixture(scope="module")
+def http_service(lubm_graph):
+    g, maps = lubm_graph
+    registry = DatasetRegistry(ServeMetrics())
+    registry.register("lubm", g, maps)
+    server = make_server(registry, port=0, workers=4, default_timeout_s=60.0)
+    serve_in_thread(server)
+    yield server
+    server.shutdown()
+    server.scheduler.stop()
+
+
+def _http_get(server, query, **params):
+    host, port = server.server_address[:2]
+    url = f"http://{host}:{port}/sparql?" + urlencode(
+        {"query": query, **params})
+    with urllib.request.urlopen(url, timeout=60) as r:
+        return json.loads(r.read())
+
+
+def test_http_concurrent_clients_correct_bindings(http_service):
+    server = http_service
+    expected = {name: server.registry.execute("lubm", LUBM_QUERIES[name]).count
+                for name in ("Q1", "Q2", "Q6", "Q9")}
+    errors = []
+
+    def client(tid):
+        try:
+            for name in ("Q1", "Q2", "Q6", "Q9"):
+                out = _http_get(server, LUBM_QUERIES[name])
+                assert out["stats"]["count"] == expected[name], name
+                assert len(out["results"]["bindings"]) == expected[name]
+                for b in out["results"]["bindings"]:
+                    assert set(b) <= set(out["head"]["vars"])
+        except Exception as e:  # pragma: no cover
+            errors.append((tid, e))
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120.0)
+    assert not errors
+
+
+def test_http_post_json_and_limit(http_service):
+    server = http_service
+    host, port = server.server_address[:2]
+    req = urllib.request.Request(
+        f"http://{host}:{port}/sparql",
+        data=json.dumps({"query": LUBM_QUERIES["Q6"], "dataset": "lubm",
+                         "limit": 3}).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=60) as r:
+        out = json.loads(r.read())
+    assert out["stats"]["returned"] == 3
+    assert out["stats"]["count"] > 3
+
+
+def test_http_post_raw_query_with_equals_filter(http_service):
+    # raw bodies must not be mistaken for form encoding even when the
+    # query itself contains '=' (e.g. an equality FILTER)
+    server = http_service
+    host, port = server.server_address[:2]
+    q = ("SELECT ?x ?v WHERE { ?x rdf:type ub:Student . "
+         "?x ub:age ?v . FILTER (?v >= 0) }")
+    req = urllib.request.Request(
+        f"http://{host}:{port}/sparql", data=q.encode(),
+        headers={"Content-Type": "text/plain"})
+    with urllib.request.urlopen(req, timeout=60) as r:
+        out = json.loads(r.read())
+    assert out["head"]["vars"] == ["x", "v"]
+
+
+def test_http_healthz_and_metrics(http_service):
+    server = http_service
+    host, port = server.server_address[:2]
+    _http_get(server, LUBM_QUERIES["Q1"])
+    _http_get(server, LUBM_QUERIES["Q1"])  # plan-cache hit
+    with urllib.request.urlopen(f"http://{host}:{port}/healthz",
+                                timeout=30) as r:
+        health = json.loads(r.read())
+    assert health["status"] == "ok" and "lubm" in health["datasets"]
+    with urllib.request.urlopen(f"http://{host}:{port}/metrics",
+                                timeout=30) as r:
+        text = r.read().decode()
+    metrics = {line.split(" ")[0]: float(line.split(" ")[1])
+               for line in text.splitlines()
+               if line and not line.startswith("#")}
+    assert metrics["repro_qps"] > 0
+    assert metrics["repro_plan_cache_hits_lubm"] > 0
+    assert any(k.startswith("repro_requests_total") and v > 0
+               for k, v in metrics.items())
+
+
+def test_http_error_codes(http_service):
+    server = http_service
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _http_get(server, "SELECT nonsense {{{")
+    assert ei.value.code == 400
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _http_get(server, LUBM_QUERIES["Q1"], dataset="nope")
+    assert ei.value.code == 404
+    host, port = server.server_address[:2]
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(f"http://{host}:{port}/bogus", timeout=30)
+    assert ei.value.code == 404
