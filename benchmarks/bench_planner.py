@@ -1,0 +1,53 @@
+"""Planner ablation: matching-order quality across order-search strategies.
+
+Runs the LUBM and BSBM workloads under each estimate mode — ``static``
+(cost-model greedy), ``sampled`` (paper §4.2 candidate-region estimation),
+``dp`` (exact subset DP for ≤ 8 free vertices) — and reports per-ordering
+end-to-end latency, planner time, and the cardinality-estimate error.
+
+``benchmarks/run.py`` persists this suite's return value as
+``BENCH_planner.json`` so successive PRs have a perf trajectory.
+"""
+
+from __future__ import annotations
+
+from repro.core import ExecOpts, SparqlEngine
+from repro.rdf.workloads import BSBM_QUERIES, LUBM_QUERIES
+
+from benchmarks.common import bench_query, bsbm, emit, lubm_typeaware
+
+MODES = ("static", "sampled", "dp")
+
+
+def run(quick: bool = False) -> dict:
+    datasets = [
+        ("lubm", lubm_typeaware(1 if quick else 2, 0.6), LUBM_QUERIES),
+        ("bsbm", bsbm(400 if quick else 1500), BSBM_QUERIES),
+    ]
+    snapshot: dict[str, dict] = {}
+    for ds, (g, maps), queries in datasets:
+        mode_total = {}
+        for mode in MODES:
+            engine = SparqlEngine(g, maps, ExecOpts(), estimate=mode)
+            total_us = 0.0
+            for name, q in sorted(queries.items()):
+                res, secs = bench_query(engine, q, repeats=3 if quick else 5)
+                total_us += secs * 1e6
+                plan_ms = float(res.stats.get("plan_ms", 0.0))
+                est = float(res.stats.get("est_rows", 0.0))
+                emit(f"planner.{ds}.{mode}.{name}", secs,
+                     f"count={res.count};plan_ms={plan_ms:.2f};est={est:.0f}")
+                snapshot[f"{ds}.{mode}.{name}"] = {
+                    "us_per_call": round(secs * 1e6, 1),
+                    "count": res.count,
+                    "plan_ms": round(plan_ms, 3),
+                    "est_rows": round(est, 1),
+                }
+            mode_total[mode] = total_us
+            emit(f"planner.{ds}.{mode}.TOTAL", total_us / 1e6, "")
+        snapshot[f"{ds}.TOTAL"] = {m: round(v, 1) for m, v in mode_total.items()}
+    return snapshot
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -8,12 +8,18 @@ Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks datasets
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
 
 SUITES = ["lubm", "typeaware", "opts", "parallel", "hetero", "bsbm",
-          "kernels", "archs", "serve"]
+          "kernels", "archs", "serve", "planner"]
+
+# suites whose run() return value is persisted as BENCH_<suite>.json next to
+# this file, giving future PRs a perf trajectory to compare against
+SNAPSHOT_SUITES = {"planner"}
 
 
 def main() -> None:
@@ -29,7 +35,18 @@ def main() -> None:
         mod = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
         t1 = time.time()
         try:
-            mod.run(quick=args.quick)
+            out = mod.run(quick=args.quick)
+            if suite in SNAPSHOT_SUITES and isinstance(out, dict):
+                # quick runs land in a sibling file so smoke tests never
+                # clobber the committed full-scale trajectory baseline
+                name = (f"BENCH_{suite}.quick.json" if args.quick
+                        else f"BENCH_{suite}.json")
+                path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                    name)
+                with open(path, "w") as f:
+                    json.dump({"quick": args.quick, "results": out}, f,
+                              indent=1, sort_keys=True)
+                print(f"_meta.{suite}.snapshot,0,{path}", flush=True)
         except Exception as e:  # keep the harness going; report the failure
             print(f"{suite}.SUITE_FAILED,0,{type(e).__name__}:{e}",
                   flush=True)

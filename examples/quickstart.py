@@ -46,3 +46,12 @@ print(f"professors: {res.count} (some without phones)")
 # 6. subgraph-isomorphism semantics are one flag away (§2.2 of the paper)
 iso_engine = SparqlEngine(graph, maps, ExecOpts(semantics="iso"))
 print(f"Q2 under injective semantics: {iso_engine.query(Q2).count}")
+
+# 7. EXPLAIN: the cost-based planner's matching order + per-step estimates
+plan = engine.explain(Q2)
+br = plan["branches"][0]
+print(f"Q2 plan ({br['search']} search, start {br['start_vertex']}, "
+      f"{br['start_candidates']} candidates):")
+for step in br["steps"]:
+    print(f"   bind {step['var']:<4} via {step.get('predicate', '?')} "
+          f"fanout~{step['est_fanout']} rows~{step['est_rows']}")

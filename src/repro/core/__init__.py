@@ -1,5 +1,6 @@
 from repro.core.exec import DeviceGraph, ExecOpts, Executor, Result
-from repro.core.plan import ExecPlan, build_plan, choose_start_vertex
+from repro.core.planner import (CostModel, ExecPlan, PlanError, build_plan,
+                                choose_start_vertex)
 from repro.core.query import QueryGraph, build_query_graph
 from repro.core.sparql_exec import (CompiledBranch, CompiledOptional,
                                     CompiledQuery, QueryResult, SparqlEngine)
@@ -9,7 +10,9 @@ __all__ = [
     "ExecOpts",
     "Executor",
     "Result",
+    "CostModel",
     "ExecPlan",
+    "PlanError",
     "build_plan",
     "choose_start_vertex",
     "QueryGraph",

@@ -32,7 +32,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.exec import ExecOpts, Executor, build_chunk_fn
-from repro.core.plan import ExecPlan
+from repro.core.planner import ExecPlan
 from repro.kernels import ops as kops
 from repro.utils import get_logger
 

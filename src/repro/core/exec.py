@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.plan import ExecPlan, Step
+from repro.core.planner import ExecPlan, Step
 from repro.kernels import ops as kops
 from repro.rdf.graph import LabeledGraph
 from repro.utils import get_logger

@@ -1,520 +1,28 @@
-"""Query planning: start-vertex choice, query tree, matching order (§2.2, §4).
+"""Compatibility shim — the planner moved to :mod:`repro.core.planner`.
 
-Mirrors TurboISO's pipeline, adapted for the vectorized executor:
-
-- ``choose_start_vertex``  — rank(u) = freq(g, L(u)) / deg(u) (paper's score),
-  freq from the inverse vertex-label index / predicate index / ID attribute.
-- ``write_query_tree``     — BFS tree from the start vertex; non-tree edges
-  recorded and attached to the later endpoint in the matching order.
-- ``matching order``       — greedy minimum-estimated-fanout ordering.  Two
-  estimators: ``static`` (schema statistics: per-label average fanout ×
-  label selectivity) and ``sampled`` (the paper's candidate-region-based
-  estimation: walk the tree over the *actual* start candidates with host
-  numpy and count candidates per path).  With +REUSE (default) the sampled
-  order is computed once, on the first chunk of candidate regions, and
-  reused for all regions — on TPU this is structural: one compiled XLA
-  executable serves every region.  The -REUSE ablation replans per chunk.
-
-The output ``ExecPlan`` is a static list of expansion steps the executor
-compiles into a single jitted program.
+The ad-hoc estimators that used to live here (``_vertex_freq`` /
+``_avg_fanout`` / ``_label_selectivity`` / ``_sampled_order``) became a
+real cost-based optimizer layer: graph statistics in :mod:`repro.stats`
+(built once per graph and cached on it), a ``CostModel`` + order search +
+unified base/extension plan builder in :mod:`repro.core.planner`.  This
+module re-exports the public names so existing imports keep working.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from repro.core.planner import (ExecPlan, NTCheck, PlanError, Step,
+                                build_plan, choose_start_vertex, np_cmp)
+from repro.core.planner.builder import _nlf_masks  # noqa: F401 (compat)
 
-import numpy as np
+# legacy private alias (pre-planner callers imported this name)
+_np_cmp = np_cmp
 
-from repro.core.query import QueryGraph
-from repro.rdf.graph import LabeledGraph
-from repro.utils import get_logger
-
-log = get_logger("core.plan")
-
-
-class PlanError(ValueError):
-    pass
-
-
-@dataclass
-class NTCheck:
-    """Non-tree edge check executed when query vertex ``u`` is bound.
-
-    The query edge is (other --elabel--> u) if ``forward`` else
-    (u --elabel--> other); ``other`` is bound earlier in the order.
-    """
-
-    other: int
-    elabel: int
-    forward: bool
-    pvar_idx: int = -1  # >= 0: edge label is that predicate variable's binding
-    self_loop: bool = False  # query self-loop checked against u itself
-
-
-@dataclass
-class Step:
-    u: int
-    parent: int  # -1 for a cross-component restart step
-    elabel: int  # -1 = predicate variable
-    forward: bool  # parent --el--> u (out CSR) vs u --el--> parent (in CSR)
-    pvar_idx: int = -1
-    labels: tuple[int, ...] = ()
-    bound_id: int = -1
-    nontree: tuple[NTCheck, ...] = ()
-    min_out_ntypes: int = 0  # hom-weakened degree filter constants
-    min_in_ntypes: int = 0
-    nlf_out_mask: np.ndarray | None = None  # uint32 words over neighbor types
-    nlf_in_mask: np.ndarray | None = None
-    num_filters: tuple[tuple[str, float], ...] = ()
-    optional_group: int = -1  # -1 = required pattern
-    # restart steps expand the table by this component's start candidates
-    restart_candidates: np.ndarray | None = None
-
-
-@dataclass
-class ExecPlan:
-    query: QueryGraph
-    start_vertex: int
-    start_candidates: np.ndarray  # int32, sorted
-    steps: list[Step]
-    order: list[int]  # query vertex order (including start)
-    n_pvars: int
-    unsat: bool = False
-    # estimated fanout per step (for capacity presizing)
-    est_fanout: list[float] = field(default_factory=list)
-
-    def signature(self) -> tuple:
-        """Hashable identity for the compiled-executable cache."""
-        return (
-            self.start_vertex,
-            tuple(
-                (
-                    s.u, s.parent, s.elabel, s.forward, s.pvar_idx, s.labels,
-                    s.bound_id, s.min_out_ntypes, s.min_in_ntypes,
-                    tuple((c.other, c.elabel, c.forward, c.pvar_idx, c.self_loop)
-                          for c in s.nontree),
-                    s.num_filters, s.optional_group,
-                    None if s.restart_candidates is None
-                    else len(s.restart_candidates),
-                )
-                for s in self.steps
-            ),
-            self.n_pvars,
-        )
-
-
-# --------------------------------------------------------------------------
-# ChooseStartQueryVertex
-# --------------------------------------------------------------------------
-
-
-def _vertex_freq(g: LabeledGraph, q: QueryGraph, u: int) -> float:
-    qv = q.vertices[u]
-    if qv.bound_id >= 0:
-        return 1.0
-    if qv.bound_id == -2:  # constant missing from data
-        return 0.0
-    if qv.labels:
-        return float(g.freq(list(qv.labels)))
-    # label-free: use the predicate index over incident edges
-    best = float(g.n_vertices)
-    for e in q.edges:
-        if e.elabel < 0:
-            continue
-        subs, objs = g.predicate_index(e.elabel)
-        if e.u == u:
-            best = min(best, float(subs.shape[0]))
-        if e.v == u:
-            best = min(best, float(objs.shape[0]))
-    return best
-
-
-def _candidates(g: LabeledGraph, q: QueryGraph, u: int) -> np.ndarray:
-    qv = q.vertices[u]
-    if qv.bound_id >= 0:
-        cand = np.array([qv.bound_id], dtype=np.int32)
-        if qv.labels:  # ID + labels: verify label containment
-            bm = g.label_bitmap[qv.bound_id]
-            for lbl in qv.labels:
-                if not (bm[lbl >> 5] >> np.uint32(lbl & 31)) & np.uint32(1):
-                    return np.zeros(0, dtype=np.int32)
-        return cand
-    if qv.bound_id == -2:
-        return np.zeros(0, dtype=np.int32)
-    if qv.labels:
-        return g.candidates_with_labels(list(qv.labels))
-    # label-free: smallest predicate-index side among incident edges
-    best: np.ndarray | None = None
-    for e in q.edges:
-        if e.elabel < 0:
-            continue
-        subs, objs = g.predicate_index(e.elabel)
-        side = subs if e.u == u else (objs if e.v == u else None)
-        if side is not None and (best is None or side.shape[0] < best.shape[0]):
-            best = side
-    if best is not None:
-        return best.astype(np.int32)
-    return np.arange(g.n_vertices, dtype=np.int32)
-
-
-def choose_start_vertex(g: LabeledGraph, q: QueryGraph, component: list[int]) -> int:
-    adj = q.adjacency()
-    best_u, best_score = component[0], float("inf")
-    for u in component:
-        deg = max(1, len(adj[u]))
-        score = _vertex_freq(g, q, u) / deg
-        if score < best_score:
-            best_score = score
-            best_u = u
-    return best_u
-
-
-# --------------------------------------------------------------------------
-# WriteQueryTree + matching order
-# --------------------------------------------------------------------------
-
-
-def _avg_fanout(g: LabeledGraph, el: int, forward: bool) -> float:
-    if el < 0:
-        return float(g.out.degree.mean() + 1.0)
-    subs, objs = g.predicate_index(el)
-    m_el = int(g.out.indptr_el[el, -1] - g.out.indptr_el[el, 0])
-    srcs = subs.shape[0] if forward else objs.shape[0]
-    return m_el / max(1, srcs)
-
-
-def _label_selectivity(g: LabeledGraph, labels: tuple[int, ...]) -> float:
-    if not labels:
-        return 1.0
-    return max(1.0, float(g.freq(list(labels)))) / max(1, g.n_vertices)
-
-
-def _static_edge_cost(g: LabeledGraph, q: QueryGraph, ei: int, parent: int) -> float:
-    e = q.edges[ei]
-    forward = e.u == parent
-    child = e.v if forward else e.u
-    qv = q.vertices[child]
-    est = _avg_fanout(g, e.elabel, forward)
-    if qv.bound_id >= 0:
-        est = min(est, 0.05)
-    elif qv.labels:
-        est *= max(0.01, _label_selectivity(g, qv.labels) * 4.0)
-    return est
-
-
-def _sampled_order(
-    g: LabeledGraph,
-    q: QueryGraph,
-    start: int,
-    candidates: np.ndarray,
-    optional_rank: dict[int, int],
-) -> list[int] | None:
-    """Paper-style candidate-region estimation: walk tree edges over the real
-    start candidates (first chunk) with host numpy, greedily choosing the
-    child with the fewest total candidates.  Returns None on any pvar edge
-    (falls back to static)."""
-    sample = candidates[: min(256, candidates.shape[0])].astype(np.int64)
-    placed = {start}
-    cand_of: dict[int, np.ndarray] = {start: sample}
-    order = [start]
-    adj = q.adjacency()
-    remaining = {v for v in range(q.n_vertices)} - placed
-    # restrict to this component
-    comp = set()
-    stack = [start]
-    comp.add(start)
-    while stack:
-        cur = stack.pop()
-        for _, w in adj[cur]:
-            if w not in comp:
-                comp.add(w)
-                stack.append(w)
-    remaining &= comp
-    while remaining:
-        frontier: list[tuple[float, int, int, np.ndarray]] = []
-        for p in list(placed):
-            for ei, w in adj[p]:
-                if w in placed or w not in remaining:
-                    continue
-                e = q.edges[ei]
-                if e.elabel < 0:
-                    return None
-                forward = e.u == p
-                d = g.out if forward else g.inc
-                vp = cand_of[p]
-                starts = d.indptr_el[e.elabel, vp]
-                ends = d.indptr_el[e.elabel, vp + 1]
-                degs = ends - starts
-                total = int(degs.sum())
-                # gather up to a bounded number of children for the next level
-                child = _gather_bounded(d.nbr_el, starts, degs, bound=4096)
-                child = _filter_by_labels(g, child, q.vertices[w].labels)
-                if q.vertices[w].bound_id >= 0:
-                    child = child[child == q.vertices[w].bound_id]
-                cost = float(total) + 1e3 * optional_rank.get(w, 0)
-                frontier.append((cost, w, ei, np.unique(child)))
-        if not frontier:
-            break
-        frontier.sort(key=lambda t: t[0])
-        _, w, _, child = frontier[0]
-        placed.add(w)
-        remaining.discard(w)
-        cand_of[w] = child if child.size else np.zeros(1, dtype=np.int64)
-        order.append(w)
-    return order if len(order) == len(comp) else None
-
-
-def _gather_bounded(nbr: np.ndarray, starts: np.ndarray, degs: np.ndarray, bound: int):
-    take = np.minimum(degs, np.maximum(0, bound // max(1, len(starts))) + 1)
-    parts = [nbr[s : s + t] for s, t in zip(starts, take) if t > 0]
-    return np.concatenate(parts).astype(np.int64) if parts else np.zeros(0, np.int64)
-
-
-def _filter_by_labels(g: LabeledGraph, verts: np.ndarray, labels) -> np.ndarray:
-    if not len(labels) or verts.size == 0:
-        return verts
-    keep = np.ones(verts.shape[0], dtype=bool)
-    for lbl in labels:
-        keep &= ((g.label_bitmap[verts, lbl >> 5] >> np.uint32(lbl & 31)) & 1).astype(bool)
-    return verts[keep]
-
-
-# --------------------------------------------------------------------------
-# Plan construction
-# --------------------------------------------------------------------------
-
-
-def _nlf_masks(
-    g: LabeledGraph, q: QueryGraph, u: int
-) -> tuple[np.ndarray, np.ndarray, int, int]:
-    """Query-side NLF masks + hom-weakened degree minimums for vertex u."""
-    stride = g.n_vlabels + 1
-    n_types = g.n_elabels * stride
-    n_words = (n_types + 31) // 32
-    masks = {True: np.zeros(n_words, np.uint32), False: np.zeros(n_words, np.uint32)}
-    ntypes = {True: set(), False: set()}
-    for e in q.edges:
-        if e.elabel < 0:
-            continue
-        if e.u == u:
-            other, out_dir = e.v, True
-        elif e.v == u:
-            other, out_dir = e.u, False
-        else:
-            continue
-        labels = q.vertices[other].labels
-        ts = [e.elabel * stride] if not labels else [
-            e.elabel * stride + 1 + l for l in labels
-        ]
-        for t in ts:
-            masks[out_dir][t >> 5] |= np.uint32(1 << (t & 31))
-        ntypes[out_dir].add((e.elabel, labels))
-    return masks[True], masks[False], len(ntypes[True]), len(ntypes[False])
-
-
-def build_plan(
-    g: LabeledGraph,
-    q: QueryGraph,
-    *,
-    estimate: str = "sampled",
-    num_filters: dict[str, list[tuple[str, float]]] | None = None,
-    optional_groups: dict[int, int] | None = None,
-    use_nlf: bool = False,
-    use_deg: bool = False,
-) -> ExecPlan:
-    """Build an execution plan for a (sub-)query.
-
-    ``optional_groups`` maps query-vertex index -> optional group id (used by
-    the OPTIONAL orchestration, which plans extension steps separately).
-    ``use_nlf`` / ``use_deg`` correspond to the paper's -NLF / -DEG toggles
-    (both disabled by default, the paper's recommended configuration).
-    """
-    num_filters = num_filters or {}
-    optional_groups = optional_groups or {}
-    if q.unsat:
-        return ExecPlan(q, 0, np.zeros(0, np.int32), [], [0] if q.n_vertices else [],
-                        len(q.pvars), unsat=True)
-    if q.n_vertices == 0:
-        raise PlanError("empty query")
-
-    comps = q.connected_components()
-    # order components: the one containing the best start vertex first
-    comp_starts = [choose_start_vertex(g, q, c) for c in comps]
-    comp_rank = sorted(
-        range(len(comps)), key=lambda i: _vertex_freq(g, q, comp_starts[i])
-    )
-    adj = q.adjacency()
-    steps: list[Step] = []
-    global_order: list[int] = []
-    placed: set[int] = set()
-    edge_used = [False] * len(q.edges)
-    start_vertex = comp_starts[comp_rank[0]]
-    start_candidates = _candidates(g, q, start_vertex)
-    est_fanout: list[float] = []
-
-    for rank_pos, ci in enumerate(comp_rank):
-        comp = comps[ci]
-        s = comp_starts[ci]
-        cands = start_candidates if rank_pos == 0 else _candidates(g, q, s)
-        if use_deg and cands.size:
-            _, _, mo, mi = _nlf_masks(g, q, s)
-            keep = (g.out.degree[cands] >= mo) & (g.inc.degree[cands] >= mi)
-            cands = cands[keep]
-        if rank_pos == 0:
-            start_candidates = cands
-        else:
-            steps.append(Step(u=s, parent=-1, elabel=-1, forward=True,
-                              labels=q.vertices[s].labels,
-                              bound_id=max(q.vertices[s].bound_id, -1),
-                              optional_group=optional_groups.get(s, -1),
-                              restart_candidates=cands))
-            est_fanout.append(float(max(1, cands.shape[0])))
-        placed.add(s)
-        global_order.append(s)
-
-        # matching order within the component
-        order = None
-        if estimate == "sampled":
-            order = _sampled_order(g, q, s, cands, optional_groups)
-        if order is None:
-            order = _static_greedy_order(g, q, s, comp, adj, optional_groups)
-        # emit steps following `order`
-        for w in order[1:]:
-            # tree edge: cheapest edge from placed to w
-            best_ei, best_cost = -1, float("inf")
-            for ei, other in adj[w]:
-                if edge_used[ei] or other not in placed:
-                    continue
-                cost = _static_edge_cost(g, q, ei, other)
-                if q.edges[ei].elabel < 0:
-                    cost *= 0.5  # prefer pvar edges as tree edges (they must expand)
-                if cost < best_cost:
-                    best_cost, best_ei = cost, ei
-            if best_ei < 0:
-                raise PlanError(f"vertex {w} not connected to placed set")
-            e = q.edges[best_ei]
-            edge_used[best_ei] = True
-            forward = e.u != w  # parent --> w when parent is subject
-            parent = e.u if forward else e.v
-            # non-tree edges resolvable now (both endpoints placed after adding w)
-            nts: list[NTCheck] = []
-            for ei2, other2 in adj[w]:
-                if edge_used[ei2]:
-                    continue
-                e2 = q.edges[ei2]
-                if e2.u == e2.v == w:  # self loop
-                    edge_used[ei2] = True
-                    nts.append(NTCheck(other=w, elabel=e2.elabel, forward=True,
-                                       pvar_idx=_pvar_idx(q, e2), self_loop=True))
-                    continue
-                if other2 in placed:
-                    edge_used[ei2] = True
-                    fwd = e2.u == other2  # (other --el--> w)?
-                    if e2.elabel < 0 and _pvar_idx(q, e2) < 0:
-                        raise PlanError("unbound predicate variable on non-tree edge")
-                    nts.append(NTCheck(other=other2, elabel=e2.elabel, forward=fwd,
-                                       pvar_idx=_pvar_idx(q, e2)))
-            om, im, mo, mi = _nlf_masks(g, q, w)
-            qv = q.vertices[w]
-            steps.append(
-                Step(
-                    u=w,
-                    parent=parent,
-                    elabel=e.elabel,
-                    forward=forward,
-                    pvar_idx=_pvar_idx(q, e),
-                    labels=qv.labels,
-                    bound_id=max(qv.bound_id, -1),
-                    nontree=tuple(nts),
-                    min_out_ntypes=mo if use_deg else 0,
-                    min_in_ntypes=mi if use_deg else 0,
-                    nlf_out_mask=om if use_nlf else None,
-                    nlf_in_mask=im if use_nlf else None,
-                    num_filters=tuple(num_filters.get(qv.var or "", ())),
-                    optional_group=optional_groups.get(w, -1),
-                )
-            )
-            est_fanout.append(_static_edge_cost(g, q, best_ei, parent))
-            placed.add(w)
-            global_order.append(w)
-
-    # leftover edges (cycles whose both endpoints were placed in other comps):
-    if not all(edge_used):
-        for ei, used in enumerate(edge_used):
-            if used:
-                continue
-            e = q.edges[ei]
-            # attach as a non-tree check to the step of the later endpoint
-            later = max(global_order.index(e.u), global_order.index(e.v))
-            w = global_order[later]
-            for st in steps:
-                if st.u == w:
-                    other = e.u if e.v == w else e.v
-                    fwd = e.u == other
-                    st.nontree = (*st.nontree, NTCheck(other, e.elabel, fwd,
-                                                       _pvar_idx(q, e)))
-                    edge_used[ei] = True
-                    break
-    if not all(edge_used):
-        raise PlanError("internal: unassigned query edges remain")
-
-    # start-vertex cheap numeric filters applied on host
-    sv = q.vertices[start_vertex]
-    if sv.var and num_filters.get(sv.var) and g.numeric_value is not None:
-        vals = g.numeric_value[start_candidates]
-        keep = np.ones(start_candidates.shape[0], bool)
-        for op, c in num_filters[sv.var]:
-            keep &= _np_cmp(vals, op, c)
-        start_candidates = start_candidates[keep]
-
-    return ExecPlan(
-        query=q,
-        start_vertex=start_vertex,
-        start_candidates=np.sort(start_candidates).astype(np.int32),
-        steps=steps,
-        order=global_order,
-        n_pvars=len(q.pvars),
-        est_fanout=est_fanout,
-    )
-
-
-def _pvar_idx(q: QueryGraph, e) -> int:
-    return q.pvars.index(e.pvar) if e.pvar is not None else -1
-
-
-def _static_greedy_order(g, q, s, comp, adj, optional_groups) -> list[int]:
-    placed = {s}
-    order = [s]
-    remaining = set(comp) - placed
-    while remaining:
-        best_w, best_cost = None, float("inf")
-        for p in placed:
-            for ei, w in adj[p]:
-                if w not in remaining:
-                    continue
-                cost = _static_edge_cost(g, q, ei, p)
-                cost += 1e6 * optional_groups.get(w, 0)  # optionals last
-                if cost < best_cost:
-                    best_cost, best_w = cost, w
-        if best_w is None:
-            break
-        placed.add(best_w)
-        remaining.discard(best_w)
-        order.append(best_w)
-    return order
-
-
-def _np_cmp(vals: np.ndarray, op: str, c: float) -> np.ndarray:
-    if op == "<":
-        return vals < c
-    if op == "<=":
-        return vals <= c
-    if op == ">":
-        return vals > c
-    if op == ">=":
-        return vals >= c
-    if op == "=":
-        return vals == c
-    if op == "!=":
-        return vals != c
-    raise ValueError(op)
+__all__ = [
+    "ExecPlan",
+    "NTCheck",
+    "PlanError",
+    "Step",
+    "build_plan",
+    "choose_start_vertex",
+    "np_cmp",
+]

@@ -1,0 +1,109 @@
+"""Cost model: per-edge fanout and per-vertex frequency estimates.
+
+All estimates come from the graph's cached :class:`~repro.stats.GraphStats`
+(built once per graph) instead of the ad-hoc inline recomputation the old
+``core.plan`` helpers did on every ``build_plan`` call.  The unit of cost
+is *expected rows produced per input row* when expanding a query edge —
+exactly what the executor's capacity presizing consumes as ``est_fanout``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.query import QueryGraph
+from repro.rdf.graph import LabeledGraph
+from repro.stats import GraphStats, get_stats
+
+# a bound vertex keeps at most one row per input row; model it as strongly
+# selective rather than zero so plans still prefer genuinely cheap edges
+_BOUND_SELECTIVITY = 0.05
+_LABEL_SELECTIVITY_FLOOR = 0.01
+
+
+class CostModel:
+    """Fanout / frequency / candidate estimates for one (graph, stats) pair."""
+
+    def __init__(self, g: LabeledGraph, stats: GraphStats | None = None):
+        self.g = g
+        self.stats = stats if stats is not None else get_stats(g)
+
+    # ---------------------------------------------------------- vertex side
+    def vertex_freq(self, q: QueryGraph, u: int) -> float:
+        """Candidate-set size estimate for query vertex ``u`` (paper's
+        freq(g, L(u)); predicate-index sizes for label-free vertices)."""
+        qv = q.vertices[u]
+        if qv.bound_id >= 0:
+            return 1.0
+        if qv.bound_id == -2:  # constant missing from data
+            return 0.0
+        if qv.labels:
+            return float(self.stats.freq(qv.labels))
+        # label-free: smallest predicate-index side among incident edges
+        best = float(self.g.n_vertices)
+        for e in q.edges:
+            if e.elabel < 0:
+                continue
+            if e.u == u:
+                best = min(best, float(self.stats.pred_sources(e.elabel, True)))
+            if e.v == u:
+                best = min(best, float(self.stats.pred_sources(e.elabel, False)))
+        return best
+
+    def candidates(self, q: QueryGraph, u: int) -> np.ndarray:
+        """Materialized start-candidate set for query vertex ``u``."""
+        g = self.g
+        qv = q.vertices[u]
+        if qv.bound_id >= 0:
+            cand = np.array([qv.bound_id], dtype=np.int32)
+            if qv.labels:  # ID + labels: verify label containment
+                bm = g.label_bitmap[qv.bound_id]
+                for lbl in qv.labels:
+                    if not (bm[lbl >> 5] >> np.uint32(lbl & 31)) & np.uint32(1):
+                        return np.zeros(0, dtype=np.int32)
+            return cand
+        if qv.bound_id == -2:
+            return np.zeros(0, dtype=np.int32)
+        if qv.labels:
+            return g.candidates_with_labels(list(qv.labels))
+        # label-free: smallest predicate-index side among incident edges
+        best: np.ndarray | None = None
+        for e in q.edges:
+            if e.elabel < 0:
+                continue
+            subs, objs = g.predicate_index(e.elabel)
+            side = subs if e.u == u else (objs if e.v == u else None)
+            if side is not None and (best is None or side.shape[0] < best.shape[0]):
+                best = side
+        if best is not None:
+            return best.astype(np.int32)
+        return np.arange(g.n_vertices, dtype=np.int32)
+
+    # ------------------------------------------------------------ edge side
+    def edge_cost(self, q: QueryGraph, ei: int, parent: int) -> float:
+        """Expected rows per input row when expanding edge ``ei`` away from
+        ``parent`` — average (predicate, direction) fanout discounted by the
+        child's label selectivity / ID binding."""
+        e = q.edges[ei]
+        forward = e.u == parent
+        child = e.v if forward else e.u
+        qv = q.vertices[child]
+        est = self.stats.avg_fanout(e.elabel, forward)
+        if qv.bound_id >= 0:
+            est = min(est, _BOUND_SELECTIVITY)
+        elif qv.labels:
+            est *= max(_LABEL_SELECTIVITY_FLOOR,
+                       self.stats.label_selectivity(qv.labels) * 4.0)
+        return est
+
+    def choose_start_vertex(self, q: QueryGraph, component: list[int]) -> int:
+        """rank(u) = freq(g, L(u)) / deg(u) — the paper's start-vertex score."""
+        adj = q.adjacency()
+        best_u, best_score = component[0], float("inf")
+        for u in component:
+            deg = max(1, len(adj[u]))
+            score = self.vertex_freq(q, u) / deg
+            if score < best_score:
+                best_score = score
+                best_u = u
+        return best_u

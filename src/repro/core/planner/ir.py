@@ -1,0 +1,124 @@
+"""Plan intermediate representation: the executor's input contract.
+
+``ExecPlan`` / ``Step`` / ``NTCheck`` are exactly what
+:mod:`repro.core.exec` compiles into a jitted chunk program; the planner
+packages (:mod:`~repro.core.planner.cost`, ``order``, ``builder``) only
+ever *produce* these.  The executor-facing fields are unchanged from the
+original ``core.plan`` module; ``est_rows`` / ``search`` / ``build_ms``
+are planner diagnostics consumed by ``SparqlEngine.explain()`` and the
+serving metrics, and do not participate in ``signature()``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.query import QueryGraph
+
+
+class PlanError(ValueError):
+    pass
+
+
+class OrderNotExecutable(PlanError):
+    """The chosen matching order cannot run (e.g. it would check a
+    predicate variable before any tree edge binds it).  ``build_plan``
+    retries these once with a pvar-first order before giving up."""
+
+
+@dataclass
+class NTCheck:
+    """Non-tree edge check executed when query vertex ``u`` is bound.
+
+    The query edge is (other --elabel--> u) if ``forward`` else
+    (u --elabel--> other); ``other`` is bound earlier in the order.
+    """
+
+    other: int
+    elabel: int
+    forward: bool
+    pvar_idx: int = -1  # >= 0: edge label is that predicate variable's binding
+    self_loop: bool = False  # query self-loop checked against u itself
+
+
+@dataclass
+class Step:
+    u: int
+    parent: int  # -1 for a cross-component restart step
+    elabel: int  # -1 = predicate variable
+    forward: bool  # parent --el--> u (out CSR) vs u --el--> parent (in CSR)
+    pvar_idx: int = -1
+    labels: tuple[int, ...] = ()
+    bound_id: int = -1
+    nontree: tuple[NTCheck, ...] = ()
+    min_out_ntypes: int = 0  # hom-weakened degree filter constants
+    min_in_ntypes: int = 0
+    nlf_out_mask: np.ndarray | None = None  # uint32 words over neighbor types
+    nlf_in_mask: np.ndarray | None = None
+    num_filters: tuple[tuple[str, float], ...] = ()
+    optional_group: int = -1  # -1 = required pattern
+    # restart steps expand the table by this component's start candidates
+    restart_candidates: np.ndarray | None = None
+
+
+@dataclass
+class ExecPlan:
+    query: QueryGraph
+    start_vertex: int
+    start_candidates: np.ndarray  # int32, sorted
+    steps: list[Step]
+    order: list[int]  # query vertex order (including start)
+    n_pvars: int
+    unsat: bool = False
+    # estimated fanout per step (for capacity presizing)
+    est_fanout: list[float] = field(default_factory=list)
+    # planner diagnostics (explain() / metrics; not part of the signature)
+    est_rows: list[float] = field(default_factory=list)  # cumulative, per step
+    search: str = "greedy"  # which order search produced this plan
+    build_ms: float = 0.0  # wall time spent planning
+
+    def signature(self) -> tuple:
+        """Hashable identity for the compiled-executable cache."""
+        return (
+            self.start_vertex,
+            tuple(
+                (
+                    s.u, s.parent, s.elabel, s.forward, s.pvar_idx, s.labels,
+                    s.bound_id, s.min_out_ntypes, s.min_in_ntypes,
+                    tuple((c.other, c.elabel, c.forward, c.pvar_idx, c.self_loop)
+                          for c in s.nontree),
+                    s.num_filters, s.optional_group,
+                    None if s.restart_candidates is None
+                    else len(s.restart_candidates),
+                )
+                for s in self.steps
+            ),
+            self.n_pvars,
+        )
+
+    def estimated_rows(self) -> float:
+        """Final estimated result cardinality.  A plan with no steps (point
+        query / pure extension) is exactly its start-candidate count."""
+        if self.unsat:
+            return 0.0
+        if self.est_rows:
+            return self.est_rows[-1]
+        return float(max(1, self.start_candidates.shape[0]))
+
+
+def np_cmp(vals: np.ndarray, op: str, c: float) -> np.ndarray:
+    if op == "<":
+        return vals < c
+    if op == "<=":
+        return vals <= c
+    if op == ">":
+        return vals > c
+    if op == ">=":
+        return vals >= c
+    if op == "=":
+        return vals == c
+    if op == "!=":
+        return vals != c
+    raise ValueError(op)

@@ -32,7 +32,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.exec import ExecOpts, Executor, Result
-from repro.core.plan import ExecPlan, build_plan
+from repro.core.planner import ExecPlan, build_plan, explain_plan, np_cmp
 from repro.core.query import QueryGraph, build_query_graph
 from repro.rdf.sparql import (Comparison, GroupPattern, Literal, Regex,
                               SelectQuery, Var, parse_sparql)
@@ -100,6 +100,19 @@ class CompiledQuery:
     branches: list[CompiledBranch]
     variables: list[str]    # result columns (first branch's projection)
     kinds: list[str]
+    plan_ms: float = 0.0    # total planner time (base + extension plans)
+
+    def estimated_rows(self) -> float:
+        """Planner cardinality estimate for the full query (sum of branch
+        base-plan estimates scaled by OPTIONAL extension multipliers ≥ 1:
+        a left join never drops base rows)."""
+        total = 0.0
+        for br in self.branches:
+            est = br.plan.estimated_rows()
+            for co in br.optionals:
+                est *= max(1.0, co.plan.estimated_rows())
+            total += est
+        return total
 
 
 class SparqlEngine:
@@ -142,13 +155,20 @@ class SparqlEngine:
         canon = canonicalize_query(ast)
         return self.compile_canonical(canon), canon
 
-    def compile_canonical(self, canon) -> CompiledQuery:
-        """Compile a pre-canonicalized query through the plan cache."""
+    def compile_canonical(self, canon, *, with_fresh: bool = False):
+        """Compile a pre-canonicalized query through the plan cache.
+
+        With ``with_fresh=True`` returns ``(compiled, fresh)`` where
+        ``fresh`` tells whether *this call* built the plan (vs. a cache
+        hit) — callers recording plan-search metrics need that rather than
+        inferring it from shared cache counters, which races under
+        concurrent compilation."""
         compiled = self._plan_cache.get(canon.fingerprint)
-        if compiled is None:
+        fresh = compiled is None
+        if fresh:
             compiled = self._compile_ast(canon.query, canon.fingerprint)
             self._plan_cache.put(canon.fingerprint, compiled)
-        return compiled
+        return (compiled, fresh) if with_fresh else compiled
 
     def execute_compiled(self, compiled: CompiledQuery) -> QueryResult:
         """Run a compiled query; result columns keep its variable names."""
@@ -161,7 +181,9 @@ class SparqlEngine:
             all_rows.append(rows)
         rows = np.concatenate(all_rows) if all_rows else np.zeros((0, 0), np.int32)
         return QueryResult(list(variables), rows, list(kinds),
-                           count=int(rows.shape[0]))
+                           count=int(rows.shape[0]),
+                           stats={"plan_ms": compiled.plan_ms,
+                                  "est_rows": compiled.estimated_rows()})
 
     def query(self, sparql: str, collect: str = "bindings") -> QueryResult:
         ast = parse_sparql(sparql)
@@ -176,16 +198,50 @@ class SparqlEngine:
     def count(self, sparql: str) -> int:
         return self.query(sparql).count
 
+    def explain(self, source: str | SelectQuery) -> dict:
+        """Describe the (possibly cached) plan for a query without running
+        it: matching order, chosen start vertex, and per-step fanout /
+        cardinality estimates, with the caller's variable names."""
+        compiled, canon = self.compile(source)
+        inverse = canon.inverse
+
+        def restore_names(obj):
+            if isinstance(obj, str) and obj.startswith("?"):
+                return "?" + inverse.get(obj[1:], obj[1:])
+            if isinstance(obj, list):
+                return [restore_names(x) for x in obj]
+            if isinstance(obj, dict):
+                return {k: restore_names(v) for k, v in obj.items()}
+            return obj
+
+        branches = []
+        for br in compiled.branches:
+            b = explain_plan(br.plan, self.maps)
+            b["optionals"] = [explain_plan(co.plan, self.maps)
+                              for co in br.optionals]
+            branches.append(restore_names(b))
+        return {
+            "fingerprint": compiled.fingerprint,
+            "estimate": self.estimate,
+            "plan_ms": round(compiled.plan_ms, 3),
+            "est_total_rows": round(compiled.estimated_rows(), 1),
+            "branches": branches,
+        }
+
     # --------------------------------------------------------- compilation
     def _compile_ast(self, ast: SelectQuery, fingerprint: str) -> CompiledQuery:
         branches = [self._compile_group(g, ast.select)
                     for g in self._expand_unions(ast.where)]
         first = branches[0] if branches else None
+        plan_ms = sum(br.plan.build_ms
+                      + sum(co.plan.build_ms for co in br.optionals)
+                      for br in branches)
         return CompiledQuery(
             fingerprint=fingerprint, select=list(ast.select),
             branches=branches,
             variables=list(first.variables) if first else [],
-            kinds=list(first.kinds) if first else [])
+            kinds=list(first.kinds) if first else [],
+            plan_ms=plan_ms)
 
     def _compile_group(self, g: GroupPattern, select: list[str]) -> CompiledBranch:
         q = build_query_graph(g.triples, self.maps)
@@ -196,10 +252,18 @@ class SparqlEngine:
         q_all = q
         optionals: list[CompiledOptional] = []
         for og in g.optionals:
+            n_base_pvars = len(q_all.pvars)
             q_ext, _, base_cols = _merge_query(q_all, og.triples, self.maps)
             cheap_o, exp_o = _split_filters(og.filters, q_ext)
-            ext_plan = _extension_plan(self.graph, q_ext, base_cols, cheap_o,
-                                       self.opts, self.estimate)
+            # the same planner entry point as the base pattern: vertices
+            # below base_cols are pre-bound table columns, pvars below
+            # n_base_pvars are bound by the base execution
+            ext_plan = build_plan(self.graph, q_ext, estimate=self.estimate,
+                                  num_filters=cheap_o,
+                                  use_nlf=self.opts.use_nlf,
+                                  use_deg=self.opts.use_deg,
+                                  prebound=base_cols,
+                                  prebound_pvars=n_base_pvars)
             optionals.append(CompiledOptional(q_ext, base_cols, ext_plan, exp_o))
             q_all = q_ext
         variables: list[str] = []
@@ -216,8 +280,9 @@ class SparqlEngine:
     # ------------------------------------------------------------ execution
     def _exec_branch(self, br: CompiledBranch) -> np.ndarray:
         res = self.executor.run(br.plan)
-        table, ptable = self._apply_expensive(res.bindings, res.pvar_bindings,
-                                              br.q, br.expensive)
+        table, ptable, _ = self._apply_expensive(res.bindings,
+                                                 res.pvar_bindings,
+                                                 br.q, br.expensive)
         for co in br.optionals:
             table, ptable = self._exec_left_join(table, ptable, co)
         q_all = br.q_all
@@ -268,11 +333,10 @@ class SparqlEngine:
                              np.zeros(0, np.int32))
         else:
             matched = self.executor.run(plan, initial=(b0, p0, org0))
-        mt, mp = self._apply_expensive(matched.bindings, matched.pvar_bindings,
-                                       q_ext, expensive,
-                                       origins=matched.origins)
-        morg = mt[1]
-        mt, mp = mt[0], mp
+        mt, mp, morg = self._apply_expensive(matched.bindings,
+                                             matched.pvar_bindings,
+                                             q_ext, expensive,
+                                             origins=matched.origins)
         # rows with no optional match: keep base + nulls
         has_match = np.zeros(table.shape[0], dtype=bool)
         if morg.shape[0]:
@@ -288,6 +352,9 @@ class SparqlEngine:
 
     def _apply_expensive(self, table, ptable, q: QueryGraph, filters,
                          origins=None):
+        """Post-hoc (regex / var-var) filters; returns a plain
+        ``(table, ptable, origins)`` — ``origins`` stays ``None`` when the
+        caller did not pass source-row ids."""
         keep = np.ones(table.shape[0], dtype=bool)
         g = self.graph
         for f in filters:
@@ -308,16 +375,12 @@ class SparqlEngine:
                 rv = _col_values(f.rhs, table, q, g)
                 if lv is None or rv is None:
                     continue
-                from repro.core.plan import _np_cmp
-
                 with np.errstate(invalid="ignore"):
-                    keep &= _np_cmp(lv - rv + 0.0, f.op, 0.0) if np.ndim(rv) else \
-                        _np_cmp(lv, f.op, float(rv))
+                    keep &= np_cmp(lv - rv + 0.0, f.op, 0.0) if np.ndim(rv) else \
+                        np_cmp(lv, f.op, float(rv))
         table = table[keep]
         ptable = ptable[keep]
-        if origins is not None:
-            return (table, origins[keep]), ptable
-        return table, ptable
+        return table, ptable, origins[keep] if origins is not None else None
 
 
 # --------------------------------------------------------------------------
@@ -398,99 +461,6 @@ def _merge_query(q_base: QueryGraph, opt_triples, maps):
     q_ext.unsat = q_ext.unsat or tmp.unsat
     base_cols = q_base.n_vertices
     return q_ext, remap, base_cols
-
-
-def _extension_plan(graph, q_ext: QueryGraph, base_cols: int, cheap, opts,
-                    estimate) -> ExecPlan:
-    """Plan binding the new vertices of q_ext, starting from bound base rows.
-
-    Builds a standard plan but marks base vertices as pre-bound: expansion
-    steps are emitted only for vertices >= base_cols (or base vertices that
-    gained labels are re-checked via a filter step).
-    """
-    from repro.core.plan import ExecPlan, NTCheck, PlanError, Step, _nlf_masks
-
-    placed = set(range(base_cols))
-    steps: list[Step] = []
-    order = list(range(base_cols))
-    edges = list(q_ext.edges)
-    edge_used = [False] * len(edges)
-    remaining = {i for i in range(len(q_ext.vertices)) if i >= base_cols}
-    est_fanout: list[float] = []
-    # greedy: repeatedly bind a new vertex adjacent to placed set
-    guard = 0
-    while remaining and guard < 1000:
-        guard += 1
-        progress = False
-        for ei, e in enumerate(edges):
-            if edge_used[ei]:
-                continue
-            u_in, v_in = e.u in placed, e.v in placed
-            if u_in and v_in:
-                continue  # becomes a non-tree check later
-            if not (u_in or v_in):
-                continue
-            w = e.v if u_in else e.u
-            parent = e.u if u_in else e.v
-            forward = e.u == parent
-            edge_used[ei] = True
-            nts: list[NTCheck] = []
-            for ei2, e2 in enumerate(edges):
-                if edge_used[ei2]:
-                    continue
-                if e2.u == e2.v == w:
-                    edge_used[ei2] = True
-                    nts.append(NTCheck(w, e2.elabel, True,
-                                       _pvar(q_ext, e2), self_loop=True))
-                elif {e2.u, e2.v} <= placed | {w} and w in (e2.u, e2.v):
-                    edge_used[ei2] = True
-                    other = e2.u if e2.v == w else e2.v
-                    nts.append(NTCheck(other, e2.elabel, e2.u == other,
-                                       _pvar(q_ext, e2)))
-            qv = q_ext.vertices[w]
-            steps.append(Step(
-                u=w, parent=parent, elabel=e.elabel, forward=forward,
-                pvar_idx=_pvar(q_ext, e), labels=qv.labels,
-                bound_id=max(qv.bound_id, -1), nontree=tuple(nts),
-                num_filters=tuple(cheap.get(qv.var or "", ()))))
-            est_fanout.append(4.0)
-            placed.add(w)
-            order.append(w)
-            remaining.discard(w)
-            progress = True
-            break
-        if not progress:
-            break
-    if remaining:
-        raise PlanError("OPTIONAL pattern not connected to the base pattern")
-    # leftover edges between placed vertices -> non-tree checks on last step
-    for ei, e in enumerate(edges):
-        if edge_used[ei]:
-            continue
-        later = max(order.index(e.u), order.index(e.v))
-        w = order[later]
-        attached = False
-        for st in steps:
-            if st.u == w:
-                other = e.u if e.v == w else e.v
-                st.nontree = (*st.nontree,
-                              NTCheck(other, e.elabel, e.u == other,
-                                      _pvar(q_ext, e)))
-                attached = True
-                break
-        if not attached:
-            raise PlanError("optional edge between two pre-bound vertices "
-                            "unsupported; move it into the base pattern")
-        edge_used[ei] = True
-    plan = ExecPlan(
-        query=q_ext, start_vertex=0,
-        start_candidates=np.zeros(0, np.int32), steps=steps,
-        order=order, n_pvars=len(q_ext.pvars), est_fanout=est_fanout)
-    return plan
-
-
-def _pvar(q: QueryGraph, e) -> int:
-    return q.pvars.index(e.pvar) if e.pvar is not None else -1
 
 
 def _align_columns(rows: np.ndarray, have: list[str], want: list[str]):

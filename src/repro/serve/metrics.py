@@ -206,6 +206,13 @@ class ServeMetrics:
         self.qps = r.gauge("repro_qps",
                            f"completions / s over the last "
                            f"{int(self.QPS_WINDOW_S)}s", fn=self._qps)
+        self.plan_search = r.histogram(
+            "repro_plan_search_ms",
+            "planner order-search + compile time per fresh plan (ms)")
+        self.card_error = r.histogram(
+            "repro_cardinality_error_log10",
+            "abs log10 ratio of planner-estimated to actual result rows",
+            buckets=(0.1, 0.25, 0.5, 1.0, 2.0, 3.0, math.inf))
         self._completions: deque[float] = deque(maxlen=65536)
         self._started = time.monotonic()
         self._lock = threading.Lock()
@@ -215,6 +222,16 @@ class ServeMetrics:
         self.latency.observe(ms)
         with self._lock:
             self._completions.append(time.monotonic())
+
+    def record_plan_search(self, ms: float) -> None:
+        """Planner wall time for a freshly compiled (cache-miss) query."""
+        self.plan_search.observe(ms)
+
+    def record_cardinality(self, estimated: float, actual: int) -> None:
+        """Estimate-vs-actual error as |log10((est+1)/(actual+1))| — 0 is a
+        perfect estimate, 1 is an order of magnitude off either way."""
+        err = abs(math.log10((max(0.0, estimated) + 1.0) / (actual + 1.0)))
+        self.card_error.observe(err)
 
     def _qps(self) -> float:
         now = time.monotonic()
@@ -236,7 +253,12 @@ class ServeMetrics:
                         fn=lambda c=cache, s=stat: getattr(c.stats, s))
 
     def summary(self) -> dict:
-        return {"requests": self.requests.total(),
-                "coalesced": self.coalesced.total(),
-                "qps": round(self._qps(), 2),
-                **self.latency.summary()}
+        out = {"requests": self.requests.total(),
+               "coalesced": self.coalesced.total(),
+               "qps": round(self._qps(), 2),
+               **self.latency.summary()}
+        if self.plan_search.count:
+            out["plan_search_p50_ms"] = self.plan_search.percentile(50)
+        if self.card_error.count:
+            out["card_error_p50_log10"] = self.card_error.percentile(50)
+        return out

@@ -9,8 +9,10 @@ bump is the explicit invalidation point for cached results.
 ``SparqlHTTPServer`` is a stdlib ``ThreadingHTTPServer`` exposing
 
 - ``GET/POST /sparql`` — ``query`` + optional ``dataset``/``limit``/
-  ``timeout_ms`` parameters (query string, form body, JSON body, or raw
-  ``application/sparql-query``), answering SPARQL-JSON-style bindings;
+  ``timeout_ms``/``explain`` parameters (query string, form body, JSON
+  body, or raw ``application/sparql-query``), answering SPARQL-JSON-style
+  bindings; ``explain=1`` returns the compiled plan (matching order,
+  per-step cardinality estimates) without executing;
 - ``GET /healthz`` — liveness + hosted datasets;
 - ``GET /metrics`` — Prometheus text exposition.
 
@@ -28,7 +30,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
 
 from repro.core.exec import ExecOpts
-from repro.core.plan import PlanError
+from repro.core.planner import PlanError
 from repro.core.query import QueryBuildError
 from repro.core.sparql_exec import QueryResult, SparqlEngine
 from repro.rdf.sparql import SparqlError
@@ -124,8 +126,13 @@ class DatasetRegistry:
             hit = ds.result_cache.get(key)
             if hit is not None:
                 return hit
-        compiled = ds.engine.compile_canonical(canon)
+        compiled, fresh = ds.engine.compile_canonical(canon, with_fresh=True)
+        if fresh:
+            self.metrics.record_plan_search(compiled.plan_ms)
         res = ds.engine.execute_compiled(compiled)
+        est = res.stats.get("est_rows")
+        if est is not None:
+            self.metrics.record_cardinality(est, res.count)
         if ds.result_cache.enabled and version == ds.version:
             ds.result_cache.put(key, res)
         return res
@@ -143,6 +150,11 @@ class DatasetRegistry:
     def decode(self, name: str, res: QueryResult,
                limit: int | None = None) -> list[dict]:
         return res.decode(self.get(name).maps, limit=limit)
+
+    def explain(self, name: str, sparql: str) -> dict:
+        """Describe the plan (order, start vertex, per-step estimates)
+        without executing; compiles through the shared plan cache."""
+        return self.get(name).engine.explain(sparql)
 
     def stats(self) -> dict:
         out = {}
@@ -250,8 +262,24 @@ class _Handler(BaseHTTPRequestHandler):
             limit = int(params["limit"]) if "limit" in params else None
             timeout_s = (float(params["timeout_ms"]) / 1e3
                          if "timeout_ms" in params else None)
+            explain = str(params.get("explain", "")).lower() in ("1", "true",
+                                                                 "yes")
         except (ValueError, UnknownDataset) as e:
             self._error(400, str(e))
+            return
+        if explain:
+            # plan description only — no execution, no scheduler round-trip
+            try:
+                plan = registry.explain(dataset, query)
+            except UnknownDataset as e:
+                self._error(404, f"unknown dataset: {e}")
+            except (SparqlError, QueryBuildError, PlanError) as e:
+                self._error(400, str(e))
+            except Exception as e:  # noqa: BLE001 — keep the handler alive
+                log.exception("internal error explaining query")
+                self._error(500, f"internal error: {e}")
+            else:
+                self._send_json(200, {"dataset": dataset, "explain": plan})
             return
         try:
             res = self.server.scheduler.submit(dataset, query,

@@ -1,0 +1,11 @@
+"""repro.stats — graph statistics shared by the cost-based planner.
+
+``get_stats(graph)`` builds a :class:`GraphStats` once per
+:class:`~repro.rdf.graph.LabeledGraph` and caches it on the graph object:
+per-predicate cardinalities, per-direction fanout tables, label frequency /
+cooccurrence, and a bounded-sample join-cardinality estimator.
+"""
+
+from repro.stats.graph_stats import GraphStats, get_stats
+
+__all__ = ["GraphStats", "get_stats"]

@@ -1,0 +1,197 @@
+"""Unified graph statistics for the cost-based planner (paper §4.2).
+
+``GraphStats`` is built once per :class:`~repro.rdf.graph.LabeledGraph` and
+cached on it (``get_stats``).  It centralizes every number the planner used
+to recompute inline on each ``build_plan`` call:
+
+- per-predicate edge counts and distinct subject/object counts (the
+  predicate index sizes, without materializing the index arrays);
+- per-(predicate, direction) average and maximum fanout;
+- vertex-label frequency (``freq(g, l)``) and a label-cooccurrence table
+  giving exact two-label intersection sizes (multi-label frequencies fall
+  back to the tightest pairwise bound, with an exact memoized path for the
+  label sets queries actually mention);
+- a bounded-sample join-cardinality estimator: given a sample of source
+  vertices, the observed mean fanout under a (predicate, direction) — the
+  paper's candidate-region-size estimation distilled to one probe.
+
+Everything is derived from arrays the graph already holds; building is a
+few vectorized passes over the per-label CSR offset tables.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+import numpy as np
+
+from repro.rdf.graph import LabeledGraph
+
+# above this many vertex labels the dense cooccurrence table is skipped
+# (planner falls back to min(label_freq) bounds + the exact memo)
+_MAX_DENSE_COOC = 512
+# default sample bound for sampled_fanout
+_SAMPLE_BOUND = 256
+
+
+@dataclass
+class GraphStats:
+    graph: LabeledGraph = field(repr=False)
+    n_vertices: int
+    n_edges: int
+    n_elabels: int
+    n_vlabels: int
+    # per-predicate: edge count, distinct subjects/objects
+    pred_edges: np.ndarray  # int64 [n_elabels]
+    pred_subjects: np.ndarray  # int64 [n_elabels]
+    pred_objects: np.ndarray  # int64 [n_elabels]
+    # per-(predicate, direction) fanout
+    fanout_avg_out: np.ndarray  # float64 [n_elabels]
+    fanout_avg_in: np.ndarray
+    fanout_max_out: np.ndarray  # int64 [n_elabels]
+    fanout_max_in: np.ndarray
+    # vertex-label tables
+    label_freq: np.ndarray  # int64 [n_vlabels]
+    label_cooc: np.ndarray | None  # int64 [n_vlabels, n_vlabels] or None
+    avg_degree: float
+    # memoized exact multi-label frequencies (small: only label sets that
+    # queries mention)
+    _freq_memo: dict[tuple[int, ...], int] = field(default_factory=dict,
+                                                   repr=False)
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(g: LabeledGraph) -> "GraphStats":
+        if g.n_elabels:
+            deg_out = np.diff(g.out.indptr_el, axis=1)  # [n_elabels, n_vertices]
+            deg_in = np.diff(g.inc.indptr_el, axis=1)
+            pred_edges = deg_out.sum(axis=1)
+            pred_subjects = (deg_out > 0).sum(axis=1)
+            pred_objects = (deg_in > 0).sum(axis=1)
+            fanout_avg_out = pred_edges / np.maximum(1, pred_subjects)
+            fanout_avg_in = pred_edges / np.maximum(1, pred_objects)
+            fanout_max_out = deg_out.max(axis=1, initial=0)
+            fanout_max_in = deg_in.max(axis=1, initial=0)
+        else:
+            z = np.zeros(0, np.int64)
+            pred_edges = pred_subjects = pred_objects = z
+            fanout_avg_out = fanout_avg_in = np.zeros(0, np.float64)
+            fanout_max_out = fanout_max_in = z
+        label_freq = (np.diff(g.vl_indptr).astype(np.int64)[: g.n_vlabels]
+                      if g.n_vlabels else np.zeros(0, np.int64))
+        label_cooc = None
+        if 0 < g.n_vlabels <= _MAX_DENSE_COOC:
+            # chunked M^T M over the unpacked label bitmap: vectorized, and
+            # peak extra memory stays at chunk x n_vlabels float32
+            cooc = np.zeros((g.n_vlabels, g.n_vlabels), dtype=np.float64)
+            chunk = 1 << 16
+            for lo in range(0, g.n_vertices, chunk):
+                words = g.label_bitmap[lo : lo + chunk]
+                bits = np.unpackbits(
+                    words.view(np.uint8), axis=1, bitorder="little"
+                )[:, : g.n_vlabels].astype(np.float32)
+                cooc += bits.T @ bits
+            label_cooc = cooc.astype(np.int64)
+        return GraphStats(
+            graph=g,
+            n_vertices=g.n_vertices,
+            n_edges=g.n_edges,
+            n_elabels=g.n_elabels,
+            n_vlabels=g.n_vlabels,
+            pred_edges=pred_edges,
+            pred_subjects=pred_subjects,
+            pred_objects=pred_objects,
+            fanout_avg_out=fanout_avg_out,
+            fanout_avg_in=fanout_avg_in,
+            fanout_max_out=fanout_max_out,
+            fanout_max_in=fanout_max_in,
+            label_freq=label_freq,
+            label_cooc=label_cooc,
+            avg_degree=float(g.out.degree.mean()) if g.n_vertices else 0.0,
+        )
+
+    # ------------------------------------------------------------- predicates
+    def avg_fanout(self, el: int, forward: bool) -> float:
+        """Mean out-degree of subjects (forward) / in-degree of objects."""
+        if el < 0 or el >= self.n_elabels:
+            return self.avg_degree + 1.0
+        return float((self.fanout_avg_out if forward
+                      else self.fanout_avg_in)[el])
+
+    def max_fanout(self, el: int, forward: bool) -> int:
+        if el < 0 or el >= self.n_elabels:
+            return self.n_vertices
+        return int((self.fanout_max_out if forward
+                    else self.fanout_max_in)[el])
+
+    def pred_sources(self, el: int, forward: bool) -> int:
+        """Distinct subjects (forward) / objects (backward) of predicate el."""
+        if el < 0 or el >= self.n_elabels:
+            return self.n_vertices
+        return int((self.pred_subjects if forward else self.pred_objects)[el])
+
+    # ----------------------------------------------------------- label tables
+    def freq(self, labels: Sequence[int]) -> int:
+        """|∩_l V_l| — exact for 0/1/2 labels, exact-memoized beyond."""
+        labels = tuple(sorted(labels))
+        if not labels:
+            return self.n_vertices
+        if len(labels) == 1:
+            return int(self.label_freq[labels[0]])
+        if len(labels) == 2 and self.label_cooc is not None:
+            return int(self.label_cooc[labels[0], labels[1]])
+        hit = self._freq_memo.get(labels)
+        if hit is None:
+            hit = self.graph.freq(list(labels))
+            self._freq_memo[labels] = hit
+        return hit
+
+    def label_selectivity(self, labels: Sequence[int]) -> float:
+        if not labels:
+            return 1.0
+        return max(1.0, float(self.freq(labels))) / max(1, self.n_vertices)
+
+    # ----------------------------------------------- sampled join cardinality
+    def sampled_fanout(self, el: int, forward: bool,
+                       sources: np.ndarray,
+                       bound: int = _SAMPLE_BOUND) -> float:
+        """Bounded-sample join-cardinality estimate: mean (el, direction)
+        fanout over at most ``bound`` of the given source vertices.  This is
+        the planner's probe for "how many rows does expanding this edge from
+        *these* candidates produce", vs. the whole-graph average."""
+        if sources.size == 0:
+            return 0.0
+        if el < 0 or el >= self.n_elabels:
+            d = self.graph.out if forward else self.graph.inc
+            sample = sources[:bound].astype(np.int64)
+            return float(d.degree[sample].mean())
+        d = self.graph.out if forward else self.graph.inc
+        sample = sources[:bound].astype(np.int64)
+        degs = d.indptr_el[el, sample + 1] - d.indptr_el[el, sample]
+        return float(degs.mean())
+
+    def snapshot(self) -> dict:
+        """Small JSON-able summary (diagnostics / /healthz)."""
+        return {
+            "n_vertices": self.n_vertices,
+            "n_edges": self.n_edges,
+            "n_elabels": self.n_elabels,
+            "n_vlabels": self.n_vlabels,
+            "avg_degree": round(self.avg_degree, 3),
+            "max_fanout_out": int(self.fanout_max_out.max(initial=0)),
+            "max_fanout_in": int(self.fanout_max_in.max(initial=0)),
+        }
+
+
+def get_stats(g: LabeledGraph) -> GraphStats:
+    """Return the graph's cached ``GraphStats``, building it on first use.
+
+    The cache lives on the graph object itself, so a graph rebuilt in place
+    (new object) naturally gets fresh statistics.
+    """
+    s = getattr(g, "_graph_stats", None)
+    if s is None or s.graph is not g:
+        s = GraphStats.build(g)
+        g._graph_stats = s  # type: ignore[attr-defined]
+    return s

@@ -1,0 +1,271 @@
+"""Planner subsystem tests.
+
+Invariants: (1) every *legal* matching order yields the same result
+multiset — the planner only affects speed, never answers (property test,
+hypothesis-guarded per conftest); (2) base patterns and OPTIONAL extension
+plans share one builder (``repro.core.planner.build_plan``) with real
+cost-model fanouts instead of the old hardcoded 4.0; (3) GraphStats is
+built once per graph and cached on it; (4) all estimate modes agree;
+(5) ``explain()`` reports the order with the caller's variable names.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from conftest import (given, random_labeled_graph, random_query_graph,
+                      settings, st)
+from repro.core import (CostModel, ExecOpts, Executor, PlanError,
+                        SparqlEngine, build_plan, build_query_graph)
+from repro.core import sparql_exec as sparql_exec_mod
+from repro.core.planner import DP_MAX_VERTICES, ESTIMATE_MODES
+from repro.rdf.sparql import parse_sparql
+from repro.rdf.workloads import BSBM_QUERIES, LUBM_QUERIES
+from repro.stats import GraphStats, get_stats
+
+
+def _multiset(g, q, opts=None, **plan_kw):
+    plan = build_plan(g, q, **plan_kw)
+    res = Executor(g, opts or ExecOpts()).run(plan)
+    return sorted(map(tuple, res.bindings.tolist()))
+
+
+# --------------------------------------------------------------- GraphStats
+
+
+def test_stats_built_once_and_cached():
+    rng = np.random.default_rng(0)
+    g = random_labeled_graph(rng, n_vertices=12, p_edge=0.3)
+    s = get_stats(g)
+    assert isinstance(s, GraphStats)
+    assert get_stats(g) is s  # cached on the graph object
+    # tables are consistent with the graph
+    assert int(s.pred_edges.sum()) == g.n_edges
+    for lbl in range(g.n_vlabels):
+        assert int(s.label_freq[lbl]) == g.freq([lbl])
+    # cooccurrence diagonal == frequency; symmetric
+    if s.label_cooc is not None:
+        np.testing.assert_array_equal(np.diag(s.label_cooc), s.label_freq)
+        np.testing.assert_array_equal(s.label_cooc, s.label_cooc.T)
+
+
+def test_stats_sampled_fanout_matches_degrees():
+    rng = np.random.default_rng(1)
+    g = random_labeled_graph(rng, n_vertices=15, p_edge=0.4)
+    s = get_stats(g)
+    all_v = np.arange(g.n_vertices)
+    for el in range(g.n_elabels):
+        exact = np.diff(g.out.indptr_el[el]).mean()
+        assert s.sampled_fanout(el, True, all_v) == pytest.approx(exact)
+
+
+# ------------------------------------------------- order invariance (fixed)
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11, 42])
+def test_estimate_modes_agree(seed):
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(rng, n_vertices=10, p_edge=0.3)
+    q = random_query_graph(rng, g, n_qv=3)
+    results = {m: _multiset(g, q, estimate=m) for m in ESTIMATE_MODES}
+    assert len({tuple(r) for r in results.values()}) == 1, results
+
+
+@pytest.mark.parametrize("seed", [1, 7])
+def test_every_legal_forced_order_same_multiset(seed):
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(rng, n_vertices=9, p_edge=0.35)
+    q = random_query_graph(rng, g, n_qv=3)
+    reference = None
+    legal = 0
+    for perm in itertools.permutations(range(q.n_vertices)):
+        try:
+            got = _multiset(g, q, force_order=list(perm))
+        except PlanError:
+            continue  # order binds a vertex before any neighbor
+        legal += 1
+        if reference is None:
+            reference = got
+        assert got == reference, perm
+    assert legal > 0
+
+
+def test_force_order_validates():
+    rng = np.random.default_rng(2)
+    g = random_labeled_graph(rng, n_vertices=8, p_edge=0.4)
+    q = random_query_graph(rng, g, n_qv=3)
+    with pytest.raises(PlanError):
+        build_plan(g, q, force_order=[0, 0, 1])  # not a permutation
+
+
+# ---------------------------------------------- order invariance (property)
+
+
+@given(st.integers(0, 10_000), st.integers(3, 4))
+@settings(max_examples=15, deadline=None)
+def test_property_matching_order_invariance(seed, n_qv):
+    """Every legal matching order yields the same result multiset."""
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(rng, n_vertices=10, p_edge=0.3)
+    q = random_query_graph(rng, g, n_qv=n_qv, with_pvar=True)
+    reference = None
+    for perm in itertools.permutations(range(q.n_vertices)):
+        try:
+            got = _multiset(g, q, force_order=list(perm))
+        except PlanError:
+            continue
+        if reference is None:
+            reference = got
+        assert got == reference, perm
+    assert reference is not None
+
+
+# ------------------------------------------------------------ DP order
+
+
+def test_dp_search_used_and_correct(lubm_graph):
+    g, maps = lubm_graph
+    for name in ("Q2", "Q9", "Q4"):
+        ast = parse_sparql(LUBM_QUERIES[name])
+        q = build_query_graph(ast.where.triples, maps)
+        dp_plan = build_plan(g, q, estimate="dp")
+        if q.n_vertices <= DP_MAX_VERTICES:
+            assert dp_plan.search == "dp", name
+        ex = Executor(g, ExecOpts())
+        assert ex.run(dp_plan, collect="count").count == \
+            ex.run(build_plan(g, q, estimate="sampled"),
+                   collect="count").count, name
+
+
+# ------------------------------------------- sampled order with pvar edges
+
+
+def test_sampled_survives_pvar_edges(bsbm_graph):
+    """A predicate-variable edge no longer aborts sampling for the whole
+    query (old behavior: any pvar edge -> static fallback)."""
+    g, maps = bsbm_graph
+    ast = parse_sparql("""
+        SELECT ?r ?p WHERE {
+          ?r rdf:type b:Review .
+          ?r b:reviewFor ?prod .
+          ?prod ?p ?o . }""")
+    q = build_query_graph(ast.where.triples, maps)
+    plan = build_plan(g, q, estimate="sampled")
+    assert plan.search == "sampled"
+    # and the result still matches the greedy ordering
+    ex = Executor(g, ExecOpts())
+    static = build_plan(g, q, estimate="static")
+    assert ex.run(plan, collect="count").count == \
+        ex.run(static, collect="count").count
+
+
+def test_converging_pvar_edges_replan(hetero_graph):
+    """Two predicate-variable edges meeting at one vertex: the estimate
+    orders may leave one as an (unbindable) non-tree check; the builder
+    must fall back to a pvar-first order instead of rejecting the query."""
+    g, maps = hetero_graph
+    ast = parse_sparql("SELECT ?a WHERE { ?a ?p ?b . ?b ?q ?c . "
+                       "?a y:pred0 ?c . }")
+    q = build_query_graph(ast.where.triples, maps)
+    counts = set()
+    for mode in ESTIMATE_MODES:
+        plan = build_plan(g, q, estimate=mode)  # must not raise
+        counts.add(Executor(g, ExecOpts()).run(plan, collect="count").count)
+    assert len(counts) == 1
+
+
+# ---------------------------------------------- one builder for base + OPT
+
+
+def test_optional_and_base_share_one_builder(bsbm_graph, monkeypatch):
+    """OPTIONAL extension plans go through the same planner entry point as
+    base plans, flagged by ``prebound``."""
+    g, maps = bsbm_graph
+    calls = []
+    real = sparql_exec_mod.build_plan
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("prebound", 0))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(sparql_exec_mod, "build_plan", spy)
+    engine = SparqlEngine(g, maps)
+    res = engine.query(BSBM_QUERIES["B8"])
+    assert res.count > 0
+    assert 0 in calls  # base plan
+    assert any(p > 0 for p in calls)  # extension plan, same builder
+    # the old duplicated greedy loop is gone
+    assert not hasattr(sparql_exec_mod, "_extension_plan")
+
+
+def test_extension_fanout_is_cost_model_driven(bsbm_graph):
+    """No hardcoded 4.0: extension-step fanouts come from the cost model
+    (b:rating2 is single-valued, so the estimate must be ~1)."""
+    g, maps = bsbm_graph
+    engine = SparqlEngine(g, maps)
+    compiled, _ = engine.compile(BSBM_QUERIES["B8"])
+    (co,) = compiled.branches[0].optionals
+    assert co.plan.est_fanout, "extension plan must carry estimates"
+    assert all(f < 2.0 for f in co.plan.est_fanout), co.plan.est_fanout
+    assert co.plan.order[: co.base_cols] == list(range(co.base_cols))
+
+
+def test_extension_not_connected_raises(bsbm_graph):
+    g, maps = bsbm_graph
+    engine = SparqlEngine(g, maps)
+    with pytest.raises(PlanError):
+        engine.query("""
+            SELECT ?r WHERE {
+              ?r rdf:type b:Review .
+              OPTIONAL { ?z b:price ?w . } }""")
+
+
+# ------------------------------------------------------------------ explain
+
+
+def test_explain_reports_order_and_estimates(lubm_graph):
+    g, maps = lubm_graph
+    engine = SparqlEngine(g, maps)
+    ex = engine.explain(LUBM_QUERIES["Q2"])
+    assert ex["branches"], ex
+    br = ex["branches"][0]
+    assert set(br["order"]) == {"?x", "?y", "?z"}  # caller's names restored
+    assert len(br["steps"]) == len(br["order"]) - 1
+    for step in br["steps"]:
+        assert step["est_fanout"] is not None
+        assert step["est_rows"] is not None
+        assert "predicate" in step
+    assert ex["plan_ms"] >= 0.0
+    assert ex["est_total_rows"] >= 0.0
+
+
+def test_explain_includes_optional_plans(bsbm_graph):
+    g, maps = bsbm_graph
+    engine = SparqlEngine(g, maps)
+    ex = engine.explain(BSBM_QUERIES["B9"])
+    opts = ex["branches"][0]["optionals"]
+    assert len(opts) == 1
+    assert opts[0]["steps"], opts
+    assert ex["fingerprint"]
+
+
+def test_query_result_carries_planner_stats(lubm_graph):
+    g, maps = lubm_graph
+    engine = SparqlEngine(g, maps)
+    res = engine.query(LUBM_QUERIES["Q1"])
+    assert "plan_ms" in res.stats and "est_rows" in res.stats
+
+
+# ------------------------------------------------------- cost model basics
+
+
+def test_cost_model_start_vertex_prefers_selective(lubm_graph):
+    g, maps = lubm_graph
+    cm = CostModel(g)
+    ast = parse_sparql(LUBM_QUERIES["Q1"])
+    q = build_query_graph(ast.where.triples, maps)
+    comp = list(range(q.n_vertices))
+    s = cm.choose_start_vertex(q, comp)
+    freqs = [cm.vertex_freq(q, u) / max(1, len(q.adjacency()[u])) for u in comp]
+    assert freqs[s] == min(freqs)

@@ -436,6 +436,37 @@ def test_http_healthz_and_metrics(http_service):
                for k, v in metrics.items())
 
 
+def test_http_explain(http_service):
+    server = http_service
+    out = _http_get(server, LUBM_QUERIES["Q2"], explain=1)
+    assert out["dataset"] == "lubm"
+    br = out["explain"]["branches"][0]
+    assert set(br["order"]) == {"?x", "?y", "?z"}
+    assert br["start_candidates"] >= 0
+    for step in br["steps"]:
+        assert step["est_fanout"] is not None
+        assert step["est_rows"] is not None
+    # explain never executes: no bindings key in the response
+    assert "results" not in out
+    # malformed query still yields a 400 through the explain path
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _http_get(server, "SELECT nonsense {{{", explain=1)
+    assert ei.value.code == 400
+
+
+def test_plan_search_and_cardinality_metrics(http_service):
+    server = http_service
+    _http_get(server, LUBM_QUERIES["Q9"])
+    host, port = server.server_address[:2]
+    with urllib.request.urlopen(f"http://{host}:{port}/metrics",
+                                timeout=30) as r:
+        text = r.read().decode()
+    assert "repro_plan_search_ms" in text
+    card = [line for line in text.splitlines()
+            if line.startswith("repro_cardinality_error_log10_count")]
+    assert card and float(card[0].split(" ")[1]) > 0
+
+
 def test_http_error_codes(http_service):
     server = http_service
     with pytest.raises(urllib.error.HTTPError) as ei:
