@@ -1,0 +1,78 @@
+"""Executor pipeline benchmark: legacy vs adaptive-capacity pipelined.
+
+Head-to-head on the heavy (increasing-solution / join-dense) LUBM and BSBM
+queries, the workloads dominated by the binding-table inner loop:
+
+  legacy     — one static capacity for every plan step (whole-plan fanout
+               product), overflow redoes the chunk from step 0, synchronous
+               dispatch, no fused kernel (``cap_schedule=False,
+               suffix_resume=False, async_chunks=1, use_fused=False`` — the
+               pre-pipeline executor),
+  pipelined  — per-step capacity schedule from the planner's cardinality
+               estimates, suffix-resume on overflow, double-buffered chunk
+               dispatch, fused expand/filter/compact steps (defaults).
+
+Also times the pipelined engine's count-only path (no binding-table
+materialization / transfer).  The returned dict is persisted as
+``BENCH_exec.json`` by run.py — the executor's perf trajectory baseline.
+"""
+
+from __future__ import annotations
+
+from repro.core import ExecOpts, SparqlEngine
+from repro.rdf.workloads import BSBM_QUERIES, LUBM_QUERIES
+from repro.utils.timing import timed
+
+from benchmarks.common import bench_query, bsbm, emit, engine_parse, lubm_typeaware
+
+LUBM_HEAVY = ("Q2", "Q8", "Q9", "Q13")
+BSBM_HEAVY = ("B1", "B3", "B5", "B8")
+
+LEGACY = dict(cap_schedule=False, suffix_resume=False, async_chunks=1,
+              use_fused=False)
+
+
+def run(quick: bool = False) -> dict:
+    # 11 repeats (drop best/worst, average 9) — the legacy-vs-pipelined
+    # ratio is the committed trajectory baseline, so keep the noise down
+    repeats = 3 if quick else 11
+    datasets = [
+        ("lubm", lubm_typeaware(1 if quick else 8, 0.6),
+         {n: LUBM_QUERIES[n] for n in LUBM_HEAVY}),
+        ("bsbm", bsbm(400 if quick else 3000),
+         {n: BSBM_QUERIES[n] for n in BSBM_HEAVY}),
+    ]
+    out: dict[str, dict] = {}
+    for ds_name, (g, maps), queries in datasets:
+        eng_old = SparqlEngine(g, maps, ExecOpts(**LEGACY))
+        eng_new = SparqlEngine(g, maps, ExecOpts())
+        for name, q in queries.items():
+            res_o, secs_o = bench_query(eng_old, q, repeats=repeats)
+            res_n, secs_n = bench_query(eng_new, q, repeats=repeats)
+            if res_o.count != res_n.count:
+                raise AssertionError(
+                    f"{ds_name}.{name}: legacy count {res_o.count} != "
+                    f"pipelined count {res_n.count}")
+            ast = engine_parse(eng_new, q)
+            res_c, secs_c = timed(
+                lambda a=ast: eng_new.query_ast(a, collect="count"),
+                repeats=repeats, warmup=1)
+            speedup = secs_o / max(secs_n, 1e-12)
+            emit(f"exec.{ds_name}.{name}.legacy", secs_o,
+                 f"count={res_o.count}")
+            emit(f"exec.{ds_name}.{name}.pipelined", secs_n,
+                 f"count={res_n.count};speedup={speedup:.2f}x")
+            emit(f"exec.{ds_name}.{name}.count_only", secs_c,
+                 f"speedup_vs_legacy={secs_o / max(secs_c, 1e-12):.2f}x")
+            out[f"{ds_name}.{name}"] = {
+                "count": int(res_n.count),
+                "legacy_us": round(secs_o * 1e6, 1),
+                "pipelined_us": round(secs_n * 1e6, 1),
+                "count_only_us": round(secs_c * 1e6, 1),
+                "speedup": round(speedup, 3),
+            }
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -15,11 +15,11 @@ import time
 
 
 SUITES = ["lubm", "typeaware", "opts", "parallel", "hetero", "bsbm",
-          "kernels", "archs", "serve", "planner"]
+          "kernels", "exec", "archs", "serve", "planner"]
 
 # suites whose run() return value is persisted as BENCH_<suite>.json next to
 # this file, giving future PRs a perf trajectory to compare against
-SNAPSHOT_SUITES = {"planner"}
+SNAPSHOT_SUITES = {"planner", "exec"}
 
 
 def main() -> None:

@@ -96,17 +96,19 @@ def run_sharded(executor: Executor, plan: ExecPlan, mesh,
     cap = min(executor.opts.max_cap,
               max(cap, 1 << int(np.ceil(np.log2(max(2.0, width * min(est, 512.0)))))))
 
-    fn = build_chunk_fn(executor.dg, plan, cap, width, executor.opts,
-                        extension=False)
+    n_steps = len(plan.steps)
+    fn = build_chunk_fn(executor.dg, plan, (cap,) * n_steps, width,
+                        executor.opts, table_input=False, collect="count")
     sarrs = executor._arrays(plan)
 
     def local(chunk_row, count_row):
-        b, p, org, count, ovf = fn(
+        _, _, _, count, ovf_step, _, _ = fn(
             chunk_row[0], count_row[0],
             jnp.zeros((width, max(1, plan.n_pvars)), jnp.int32),
             jnp.zeros((width,), jnp.int32), sarrs)
         total = jax.lax.psum(count, dp)
-        any_ovf = jax.lax.pmax(ovf.astype(jnp.int32), dp)
+        ovf = (ovf_step < jnp.int32(n_steps)).astype(jnp.int32)
+        any_ovf = jax.lax.pmax(ovf, dp)
         return total, any_ovf
 
     spec_in = P(dp, None)

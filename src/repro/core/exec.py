@@ -17,9 +17,24 @@ CSR adjacency slices followed by vectorized filters:
   - predicate-variable (M_e) binding and consistency for e-graph
     homomorphism (Definition 2).
 
-Capacity management: every step reports ``total`` rows required; if any step
-overflows its static capacity the chunk is retried with doubled capacity
-(geometric, recompile-cached).  Results are exact — overflow never truncates.
+Capacity management (the adaptive pipeline): each step runs at its own
+power-of-two capacity from the planner's ``capacity_schedule`` (derived
+from per-step cardinality estimates), so early low-cardinality steps stop
+paying full-table compaction scatters.  A step whose ragged expansion
+exceeds its capacity *freezes* the chunk — the surviving table is carried
+through the remaining (inert) steps unchanged and the program reports the
+overflowing step index — and the host re-enters the plan from exactly that
+step with only that step's capacity doubled (*suffix-resume*), instead of
+redoing the whole chunk.  Learned capacities persist per plan, so later
+chunks start right-sized.  Results are exact — overflow never truncates.
+
+The host loop keeps ``ExecOpts.async_chunks`` chunk programs in flight and
+only reads back a chunk's ``(count, overflow_step)`` scalars after the
+next chunk has been dispatched, hiding dispatch latency; with
+``collect="count"`` the final step skips binding-table materialization and
+nothing but scalars crosses the device→host boundary.  Steps with no
+non-tree checks run through the fused Pallas expand/filter/compact kernel
+(:mod:`repro.kernels.expand_filter`) where the backend supports it.
 
 Non-tree join directions (uniform rule): for a check attached to query
 vertex u with candidate v_new and earlier vertex `other` bound to other_v,
@@ -32,6 +47,8 @@ is always v_new, and the direction picks the out/in CSR.
 
 from __future__ import annotations
 
+import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any
 
@@ -40,6 +57,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.planner import ExecPlan, Step
+from repro.core.planner.ir import _next_pow2
 from repro.kernels import ops as kops
 from repro.rdf.graph import LabeledGraph
 from repro.utils import get_logger
@@ -94,12 +112,11 @@ class DeviceGraph:
             arrays["nlf_out"] = dev(nlf_o, np.uint32)
             arrays["nlf_in"] = dev(nlf_i, np.uint32)
         max_deg = int(max(g.out.degree.max(initial=1), g.inc.degree.max(initial=1)))
-        mdo = np.asarray(
-            [int(np.diff(g.out.indptr_el[e]).max(initial=0)) for e in range(g.n_elabels)]
-        ) if g.n_elabels else np.zeros(0, np.int64)
-        mdi = np.asarray(
-            [int(np.diff(g.inc.indptr_el[e]).max(initial=0)) for e in range(g.n_elabels)]
-        ) if g.n_elabels else np.zeros(0, np.int64)
+        # one vectorized diff+reduce over the stacked [n_elabels, V+1] indptr
+        mdo = (np.max(np.diff(g.out.indptr_el, axis=1), axis=1, initial=0)
+               if g.n_elabels else np.zeros(0, np.int64))
+        mdi = (np.max(np.diff(g.inc.indptr_el, axis=1), axis=1, initial=0)
+               if g.n_elabels else np.zeros(0, np.int64))
         return DeviceGraph(
             n_vertices=g.n_vertices,
             n_elabels=g.n_elabels,
@@ -128,10 +145,17 @@ class ExecOpts:
     chunk: int = 8192  # starting vertices per chunk (§Perf: 2-3.7× over 1k on heavy queries)
     init_cap: int = 4096
     max_cap: int = 1 << 22
+    # --- adaptive pipeline toggles (all False/1 ≈ the legacy executor) ---
+    cap_schedule: bool = True  # per-step capacity schedule from the planner
+    suffix_resume: bool = True  # overflow resumes from the overflowing step
+    async_chunks: int = 2  # chunk programs kept in flight before readback
+    use_fused: bool = True  # fused expand/filter/compact kernel fast path
+    cap_slack: float = 1.0  # schedule headroom (pow2 rounding adds ~1.5x already)
+    profile: bool = False  # per-step wall-time stats (adds host syncs)
 
     def key(self) -> tuple:
         return (self.semantics, self.use_int, self.use_nlf, self.use_deg,
-                self.int_tile)
+                self.int_tile, self.use_fused)
 
 
 @dataclass
@@ -194,14 +218,13 @@ def _plan_arrays(g: LabeledGraph, plan: ExecPlan) -> list[dict[str, jax.Array]]:
 # --------------------------------------------------------------------------
 
 
-def _compact(b, p, org, valid, cap: int):
-    """Scatter valid rows to a prefix; invalid rows land in a dropped slot."""
-    count = jnp.sum(valid.astype(jnp.int32))
-    pos = jnp.where(valid, jnp.cumsum(valid.astype(jnp.int32)) - 1, cap)
-    b2 = jnp.full((cap + 1, b.shape[1]), _NULL, dtype=jnp.int32).at[pos].set(b)[:cap]
-    p2 = jnp.full((cap + 1, p.shape[1]), _NULL, dtype=jnp.int32).at[pos].set(p)[:cap]
-    o2 = jnp.full((cap + 1,), _NULL, dtype=jnp.int32).at[pos].set(org)[:cap]
-    return b2, p2, o2, count
+def _pad_rows(x: jax.Array, rows: int) -> jax.Array:
+    """Pad a table/vector along axis 0 with nulls up to ``rows``."""
+    pad = rows - x.shape[0]
+    if pad <= 0:
+        return x
+    width = ((0, pad),) + ((0, 0),) * (x.ndim - 1)
+    return jnp.pad(x, width, constant_values=-1)
 
 
 def _nontree_mask(dg: DeviceGraph, step: Step, sarr, b_rows, p_rows, v_new,
@@ -246,108 +269,218 @@ def _nontree_mask(dg: DeviceGraph, step: Step, sarr, b_rows, p_rows, v_new,
     return ok
 
 
-def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, cap: int, n_chunk: int,
-                   opts: ExecOpts, extension: bool):
-    """Build the jittable whole-plan chunk program.
+def _fused_eligible(step: Step, opts: ExecOpts) -> bool:
+    """Steps the fused expand/filter/compact kernel covers: a tree edge (or
+    restart) whose only filters are the label bitmap and a bound ID."""
+    return (opts.use_fused and not step.nontree and opts.semantics == "hom"
+            and step.pvar_idx < 0 and not step.num_filters
+            and not step.min_out_ntypes and not step.min_in_ntypes
+            and step.nlf_out_mask is None)
 
-    ``extension=False``: the chunk is a vector of start-vertex candidates.
-    ``extension=True``: the chunk is (B0 rows, P0 rows, origin ids) and the
-    plan's steps extend those rows (OPTIONAL left joins, cross products).
+
+def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
+                   n_in: int, opts: ExecOpts, table_input: bool,
+                   collect: str = "bindings", start_step: int = 0,
+                   stop_step: int | None = None):
+    """Build the jittable chunk program for plan steps ``[start_step,
+    stop_step)`` with the per-step capacity schedule ``caps``.
+
+    ``table_input=False``: the input is a vector of start-vertex candidates
+    (``n_in`` wide) and the program seeds the binding table from it.
+    ``table_input=True``: the input is ``(B0, count, P0, origins)`` rows of
+    capacity ``n_in`` — OPTIONAL left-join extensions and suffix-resume
+    re-entries both use this form.
+
+    Overflow semantics: the first step whose ragged expansion total exceeds
+    its capacity *freezes* the table — every later step passes it through
+    unchanged — and the returned ``ovf_step`` names that step (``len(steps)``
+    = completed).  The frozen table is exactly the input the overflowing
+    step needs on re-entry, so the host resumes from there with only that
+    step's capacity doubled.  ``caps`` must be monotone non-decreasing from
+    ``n_in`` so the freeze carry is lossless.
+
+    With ``collect="count"`` the final step only tallies survivors: no
+    compacted binding table is materialized for it and only scalars need to
+    cross back to the host.
+
+    Returns ``(b, p, org, count, ovf_step, totals, kepts)`` where
+    ``totals``/``kepts`` hold each executed step's expansion total and
+    surviving-row count (``-1`` once frozen / not executed).
     """
     nq = plan.query.n_vertices
     npv = max(1, plan.n_pvars)
     steps = plan.steps
+    n_steps = len(steps)
+    stop = n_steps if stop_step is None else stop_step
     has_numeric = "numeric_value" in dg.arrays
+    n = dg.n_vertices
+    for si in range(start_step, stop):
+        prev = n_in if si == start_step else caps[si - 1]
+        if caps[si] < prev:
+            raise ValueError("capacity schedule must be monotone "
+                             f"non-decreasing (step {si}: {caps[si]} < {prev})")
 
     def fn(chunk, chunk_count, p_init, org_init, sarrs):
-        overflow = jnp.zeros((), dtype=bool)
-        if not extension:
-            b = jnp.full((cap, nq), _NULL, dtype=jnp.int32)
-            col = jnp.pad(chunk, (0, cap - n_chunk), constant_values=-1)
-            b = b.at[:, plan.start_vertex].set(col)
-            p = jnp.full((cap, npv), _NULL, dtype=jnp.int32)
-            org = jnp.arange(cap, dtype=jnp.int32)
-            count = jnp.minimum(chunk_count, cap).astype(jnp.int32)
+        if not table_input:
+            b = jnp.full((n_in, nq), _NULL, dtype=jnp.int32)
+            b = b.at[:, plan.start_vertex].set(chunk)
+            p = jnp.full((n_in, npv), _NULL, dtype=jnp.int32)
+            org = jnp.arange(n_in, dtype=jnp.int32)
+            count = jnp.minimum(chunk_count, n_in).astype(jnp.int32)
         else:
-            pad = cap - n_chunk
-            b = jnp.pad(chunk, ((0, pad), (0, 0)), constant_values=-1)
-            p = jnp.pad(p_init, ((0, pad), (0, 0)), constant_values=-1)
-            org = jnp.pad(org_init, (0, pad), constant_values=-1)
+            b, p, org = chunk, p_init, org_init
             count = chunk_count.astype(jnp.int32)
 
-        for si, step in enumerate(steps):
+        ovf_step = jnp.int32(n_steps)  # sentinel: completed
+        totals: list[jax.Array] = []
+        kepts: list[jax.Array] = []
+        cap_prev = n_in
+        for si in range(start_step, stop):
+            step = steps[si]
             sarr = sarrs[si]
-            alive = jnp.arange(cap, dtype=jnp.int32) < count
+            cap = caps[si]
+            active = ovf_step == jnp.int32(n_steps)
+            alive = jnp.arange(cap_prev, dtype=jnp.int32) < count
+
             if step.restart_candidates is not None:
                 k_cands = int(step.restart_candidates.shape[0])
                 deg = jnp.where(alive, jnp.int32(k_cands), 0)
                 nbr_src = sarr["restart"]
-                start = jnp.zeros(cap, dtype=jnp.int32)
+                start = jnp.zeros(cap_prev, dtype=jnp.int32)
+                deg_bound = k_cands
             elif step.elabel >= 0:
                 iptr = sarr["iptr"]
-                vp = jnp.clip(b[:, step.parent], 0, dg.n_vertices - 1)
+                vp = jnp.clip(b[:, step.parent], 0, n - 1)
                 start = iptr[vp]
                 deg = jnp.where(alive, iptr[vp + 1] - start, 0)
                 nbr_src = dg.arrays["out_nbr_el" if step.forward else "in_nbr_el"]
+                deg_bound = int(
+                    (dg.max_deg_out_el if step.forward
+                     else dg.max_deg_in_el)[step.elabel])
             else:  # predicate variable: plain CSR
-                iptr = dg.arrays["out_indptr_all" if step.forward else "in_indptr_all"]
-                vp = jnp.clip(b[:, step.parent], 0, dg.n_vertices - 1)
+                iptr = dg.arrays["out_indptr_all" if step.forward
+                                 else "in_indptr_all"]
+                vp = jnp.clip(b[:, step.parent], 0, n - 1)
                 start = iptr[vp]
                 deg = jnp.where(alive, iptr[vp + 1] - start, 0)
-                nbr_src = dg.arrays["out_nbr_all" if step.forward else "in_nbr_all"]
+                nbr_src = dg.arrays["out_nbr_all" if step.forward
+                                    else "in_nbr_all"]
+                deg_bound = 1 << dg.max_log_deg
 
-            # int32 cumsum: safe while chunk_rows × max_degree < 2**31 —
-            # true at every scale this container can hold in RAM.
             coffs = jnp.cumsum(deg.astype(jnp.int32))
             total = coffs[-1]
             offs = (coffs - deg).astype(jnp.int32)
-            overflow = overflow | (total > cap)
-            row, j, valid = kops.ragged_expand(offs, deg.astype(jnp.int32), cap)
-            idx = jnp.clip(start[row] + j, 0, nbr_src.shape[0] - 1)
-            v_new = jnp.where(valid, nbr_src[idx], _NULL)
+            ovf_here = total > cap
+            if cap_prev * max(1, deg_bound) >= 2**31:
+                # the int32 prefix sums can wrap; redo the *total* in a wide
+                # dtype (int64 with x64 enabled, else float32 — exact enough
+                # for a compare against cap <= 2**22) so a wrapped cumsum is
+                # still reported as overflow instead of silent truncation.
+                wide = jnp.int64 if jax.config.jax_enable_x64 else jnp.float32
+                total_w = jnp.sum(deg.astype(wide))
+                ovf_here = ovf_here | (total < 0) | (total_w > cap)
+            ovf_here = active & ovf_here
+            keep_new = active & ~ovf_here
+            ovf_step = jnp.where(ovf_here, jnp.int32(si), ovf_step)
+            count_only = collect == "count" and si == n_steps - 1
 
-            b_rows = b[row]
-            p_rows = p[row]
-            org_rows = org[row]
-            b_rows = b_rows.at[:, step.u].set(v_new)
+            if _fused_eligible(step, opts) and not count_only:
+                label_mask = sarr.get("label_mask")
+                if label_mask is None:
+                    label_mask = jnp.zeros(
+                        (dg.arrays["label_bitmap"].shape[1],), jnp.uint32)
+                v_out, row_sel, kept = kops.expand_filter_compact(
+                    nbr_src, dg.arrays["label_bitmap"], start, deg, offs,
+                    label_mask, jnp.int32(step.bound_id), cap)
+                # gather-based table build: when frozen, the identity index
+                # carries the old table through at zero extra cost
+                idg = jnp.where(
+                    keep_new,
+                    jnp.clip(row_sel, 0, cap_prev - 1),
+                    jnp.minimum(jnp.arange(cap, dtype=jnp.int32), cap_prev - 1))
+                nb = b[idg]
+                nb = nb.at[:, step.u].set(
+                    jnp.where(keep_new, v_out, nb[:, step.u]))
+                b, p, org = nb, p[idg], org[idg]
+                count = jnp.where(keep_new, kept, count)
+            else:
+                row, j, valid = kops.ragged_expand(offs, deg, cap)
+                idx = jnp.clip(start[row] + j, 0, nbr_src.shape[0] - 1)
+                v_new = jnp.where(valid, nbr_src[idx], _NULL)
 
-            ok = valid
-            if step.pvar_idx >= 0:  # tree-edge M_e binding
-                lab_src = dg.arrays["out_lab_all" if step.forward else "in_lab_all"]
-                el_new = jnp.where(valid, lab_src[idx], _NULL)
-                prev = p_rows[:, step.pvar_idx]
-                ok &= (prev < 0) | (prev == el_new)
-                p_rows = p_rows.at[:, step.pvar_idx].set(
-                    jnp.where(prev < 0, el_new, prev))
-            if step.bound_id >= 0:
-                ok &= v_new == jnp.int32(step.bound_id)
-            if "label_mask" in sarr:
-                bm = dg.arrays["label_bitmap"][jnp.clip(v_new, 0, dg.n_vertices - 1)]
-                ok &= kops.bitmap_superset(bm, sarr["label_mask"])
-            if step.min_out_ntypes or step.min_in_ntypes:
-                safe = jnp.clip(v_new, 0, dg.n_vertices - 1)
-                ok &= dg.arrays["out_degree"][safe] >= jnp.int32(step.min_out_ntypes)
-                ok &= dg.arrays["in_degree"][safe] >= jnp.int32(step.min_in_ntypes)
-            if "nlf_out_mask" in sarr and "nlf_out" in dg.arrays:
-                safe = jnp.clip(v_new, 0, dg.n_vertices - 1)
-                ok &= kops.bitmap_superset(dg.arrays["nlf_out"][safe],
-                                           sarr["nlf_out_mask"])
-                ok &= kops.bitmap_superset(dg.arrays["nlf_in"][safe],
-                                           sarr["nlf_in_mask"])
-            if step.num_filters and has_numeric:
-                vals = dg.arrays["numeric_value"][jnp.clip(v_new, 0, dg.n_vertices - 1)]
-                for op, cval in step.num_filters:
-                    ok &= _jnp_cmp(vals, op, cval)
-            if opts.semantics == "iso":
-                for w in plan.order:
-                    if w == step.u:
-                        break
-                    ok &= b_rows[:, w] != v_new
-            if step.nontree:
-                ok &= _nontree_mask(dg, step, sarr, b_rows, p_rows, v_new, opts)
+                b_rows = b[row]
+                p_rows = p[row]
+                org_rows = org[row]
+                b_rows = b_rows.at[:, step.u].set(v_new)
 
-            b, p, org, count = _compact(b_rows, p_rows, org_rows, ok, cap)
-        return b, p, org, count, overflow
+                ok = valid
+                if step.pvar_idx >= 0:  # tree-edge M_e binding
+                    lab_src = dg.arrays["out_lab_all" if step.forward
+                                        else "in_lab_all"]
+                    el_new = jnp.where(valid, lab_src[idx], _NULL)
+                    prev = p_rows[:, step.pvar_idx]
+                    ok &= (prev < 0) | (prev == el_new)
+                    p_rows = p_rows.at[:, step.pvar_idx].set(
+                        jnp.where(prev < 0, el_new, prev))
+                if step.bound_id >= 0:
+                    ok &= v_new == jnp.int32(step.bound_id)
+                if "label_mask" in sarr:
+                    bm = dg.arrays["label_bitmap"][jnp.clip(v_new, 0, n - 1)]
+                    ok &= kops.bitmap_superset(bm, sarr["label_mask"])
+                if step.min_out_ntypes or step.min_in_ntypes:
+                    safe = jnp.clip(v_new, 0, n - 1)
+                    ok &= dg.arrays["out_degree"][safe] >= jnp.int32(
+                        step.min_out_ntypes)
+                    ok &= dg.arrays["in_degree"][safe] >= jnp.int32(
+                        step.min_in_ntypes)
+                if "nlf_out_mask" in sarr and "nlf_out" in dg.arrays:
+                    safe = jnp.clip(v_new, 0, n - 1)
+                    ok &= kops.bitmap_superset(dg.arrays["nlf_out"][safe],
+                                               sarr["nlf_out_mask"])
+                    ok &= kops.bitmap_superset(dg.arrays["nlf_in"][safe],
+                                               sarr["nlf_in_mask"])
+                if step.num_filters and has_numeric:
+                    vals = dg.arrays["numeric_value"][jnp.clip(v_new, 0, n - 1)]
+                    for op, cval in step.num_filters:
+                        ok &= _jnp_cmp(vals, op, cval)
+                if opts.semantics == "iso":
+                    for w in plan.order:
+                        if w == step.u:
+                            break
+                        ok &= b_rows[:, w] != v_new
+                if step.nontree:
+                    ok &= _nontree_mask(dg, step, sarr, b_rows, p_rows, v_new,
+                                        opts)
+
+                kept = jnp.sum(ok.astype(jnp.int32))
+                if count_only:
+                    # final tally only: carry the (possibly frozen) table —
+                    # no compacted binding table is materialized
+                    b = _pad_rows(b, cap)
+                    p = _pad_rows(p, cap)
+                    org = _pad_rows(org, cap)
+                    count = jnp.where(keep_new, kept, count)
+                else:
+                    pos = jnp.where(ok, jnp.cumsum(ok.astype(jnp.int32)) - 1,
+                                    cap)
+                    pos = jnp.where(keep_new, pos, cap)  # frozen: drop all
+                    # scatter into the padded previous table: rows the
+                    # scatter misses keep stale values, but those sit beyond
+                    # ``count`` and every consumer masks on it — and when
+                    # frozen the untouched pad IS the carried table
+                    b = _pad_rows(b, cap + 1).at[pos].set(b_rows)[:cap]
+                    p = _pad_rows(p, cap + 1).at[pos].set(p_rows)[:cap]
+                    org = _pad_rows(org, cap + 1).at[pos].set(org_rows)[:cap]
+                    count = jnp.where(keep_new, kept, count)
+
+            totals.append(jnp.where(active, total, jnp.int32(-1)))
+            kepts.append(jnp.where(keep_new, count, jnp.int32(-1)))
+            cap_prev = cap
+
+        z = jnp.zeros(0, jnp.int32)
+        return (b, p, org, count, ovf_step,
+                jnp.stack(totals) if totals else z,
+                jnp.stack(kepts) if kepts else z)
 
     return fn
 
@@ -374,8 +507,37 @@ def _jnp_cmp(vals, op: str, c: float):
 # --------------------------------------------------------------------------
 
 
+def _grow_caps(caps: list[int], si: int, max_cap: int) -> list[int]:
+    """Double step ``si``'s capacity after an overflow (raising once it is
+    already at ``max_cap``) and restore monotonicity for later steps.
+    Mutates and returns ``caps`` — the single overflow-retry policy shared
+    by the async drain and the profiled per-step path."""
+    if caps[si] >= max_cap:
+        raise RuntimeError(
+            f"binding-table overflow at max capacity {max_cap};"
+            " raise ExecOpts.max_cap")
+    caps[si] = min(max_cap, caps[si] * 2)
+    for j in range(si + 1, len(caps)):
+        caps[j] = max(caps[j], caps[si])
+    return caps
+
+
+def _empty_stats(n_steps: int) -> dict[str, Any]:
+    return {
+        "step_rows": [0] * n_steps,
+        "step_kept": [0] * n_steps,
+        "step_retries": [0] * n_steps,
+        "step_wall_ms": None,
+        "caps": [],
+        "chunks": 0,
+        "resumes": 0,
+        "wall_ms": 0.0,
+    }
+
+
 class Executor:
-    """Chunked, retry-on-overflow plan executor with a compile cache."""
+    """Chunked plan executor: per-step capacity schedule, suffix-resume on
+    overflow, double-buffered async chunk dispatch, compile cache."""
 
     def __init__(self, g: LabeledGraph, opts: ExecOpts | None = None):
         self.opts = opts or ExecOpts()
@@ -383,13 +545,31 @@ class Executor:
         self.dg = DeviceGraph.from_graph(g, with_nlf=self.opts.use_nlf)
         self._compiled: dict[tuple, Any] = {}
         self._plan_arrays_cache: dict[int, list[dict[str, jax.Array]]] = {}
+        # learned per-plan capacity schedules (overflow doublings persist,
+        # so later chunks / queries start right-sized)
+        self._caps_cache: dict[tuple, list[int]] = {}
 
-    def _get_fn(self, plan: ExecPlan, cap: int, n_chunk: int, extension: bool):
-        key = (plan.signature(), cap, n_chunk, extension, self.opts.key())
+    def _get_fn(self, plan: ExecPlan, caps: tuple[int, ...], n_in: int,
+                table_input: bool, collect: str, start: int, stop: int):
+        # key on the [start, stop) capacity window only: suffix programs
+        # that differ in capacities of steps they never execute are
+        # byte-identical and must share one compile
+        key = (plan.signature(), caps[start:stop], n_in, table_input,
+               collect, start, stop, self.opts.key())
         fn = self._compiled.get(key)
         if fn is None:
-            raw = build_chunk_fn(self.dg, plan, cap, n_chunk, self.opts, extension)
-            fn = jax.jit(raw)
+            raw = build_chunk_fn(self.dg, plan, caps, n_in, self.opts,
+                                 table_input, collect, start, stop)
+            out_cap = caps[stop - 1] if stop > start else n_in
+            donate = ()
+            if (table_input and start > 0 and out_cap == n_in
+                    and jax.default_backend() in ("tpu", "gpu")):
+                # steady-state resume dispatches reuse the binding-table
+                # buffers in place (donation is a no-op on CPU).  Initial
+                # whole-chunk dispatches are excluded: legacy retry re-feeds
+                # the same host args, which donation would invalidate.
+                donate = (0, 2, 3)
+            fn = jax.jit(raw, donate_argnums=donate)
             self._compiled[key] = fn
         return fn
 
@@ -403,17 +583,44 @@ class Executor:
         plan._dev_arrays = (self.graph, arrs)  # type: ignore[attr-defined]
         return arrs
 
+    def _schedule(self, plan: ExecPlan, chunk_size: int) -> tuple[tuple, list[int]]:
+        """The (learned) per-step capacity schedule for this plan+chunk."""
+        opts = self.opts
+        key = (plan.signature(), chunk_size, bool(opts.cap_schedule))
+        caps = self._caps_cache.get(key)
+        if caps is None:
+            if opts.cap_schedule:
+                caps = list(plan.capacity_schedule(
+                    chunk_size, opts.init_cap, opts.max_cap, opts.cap_slack))
+            else:
+                # legacy presizing: one global capacity from the whole-plan
+                # fanout product, identical for every step
+                est = 1.0
+                for f in plan.est_fanout:
+                    est *= max(1.0, min(f, 64.0))
+                cap0 = int(min(opts.max_cap,
+                               max(opts.init_cap,
+                                   _next_pow2(int(chunk_size * min(est, 512.0))))))
+                cap0 = max(cap0, _next_pow2(chunk_size))
+                caps = [cap0] * len(plan.steps)
+            self._caps_cache[key] = caps
+        return key, caps
+
     def run(
         self,
         plan: ExecPlan,
         collect: str = "bindings",
         initial: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None,
+        profile: bool | None = None,
     ) -> Result:
         """Execute a plan.  ``initial=(B0, P0, origins)`` runs the plan's
-        steps as an *extension* of existing rows (OPTIONAL left joins)."""
+        steps as an *extension* of existing rows (OPTIONAL left joins).
+        ``profile=True`` (or ``ExecOpts.profile``) executes step-by-step
+        with host syncs to fill per-step wall times in ``Result.stats``."""
         if plan.unsat:
             return Result(0, _empty(plan), _empty_p(plan), np.zeros(0, np.int32))
         opts = self.opts
+        profile = opts.profile if profile is None else profile
         nq = plan.query.n_vertices
 
         if initial is None and not plan.steps:
@@ -438,69 +645,184 @@ class Executor:
         if n_src == 0 or (not extension and not plan.steps):
             return Result(0, _empty(plan), _empty_p(plan), np.zeros(0, np.int32))
 
+        t_run0 = time.perf_counter()
+        n_steps = len(plan.steps)
+        npv = max(1, plan.n_pvars)
+        stats = _empty_stats(n_steps)
+        if profile:
+            stats["step_wall_ms"] = [0.0] * n_steps
         total = 0
-        retried = 0
         out_b: list[np.ndarray] = []
         out_p: list[np.ndarray] = []
         out_o: list[np.ndarray] = []
         chunk_size = min(opts.chunk, max(1, n_src))
-        est = 1.0
-        for f in plan.est_fanout:
-            est *= max(1.0, min(f, 64.0))
-        cap0 = int(min(opts.max_cap,
-                       max(opts.init_cap,
-                           _next_pow2(int(chunk_size * min(est, 512.0))))))
-        cap0 = max(cap0, _next_pow2(chunk_size))
+        caps_key, caps = self._schedule(plan, chunk_size)
 
+        def host_args(offset: int, hi: int):
+            n_real = hi - offset
+            if not extension:
+                chunk = np.full(chunk_size, -1, dtype=np.int32)
+                chunk[:n_real] = plan.start_candidates[offset:hi]
+                return (jnp.asarray(chunk), jnp.int32(n_real),
+                        jnp.zeros((chunk_size, npv), jnp.int32),
+                        jnp.zeros((chunk_size,), jnp.int32))
+            bpad = np.full((chunk_size, nq), -1, dtype=np.int32)
+            bpad[:n_real] = b0[offset:hi]
+            ppad = np.full((chunk_size, npv), -1, np.int32)
+            ppad[:n_real, : p0.shape[1]] = p0[offset:hi]
+            opad = np.full(chunk_size, -1, dtype=np.int32)
+            opad[:n_real] = org0[offset:hi]
+            return (jnp.asarray(bpad), jnp.int32(n_real),
+                    jnp.asarray(ppad), jnp.asarray(opad))
+
+        def dispatch(offset: int, hi: int) -> dict:
+            args = host_args(offset, hi)
+            used = tuple(caps)
+            fn = self._get_fn(plan, used, chunk_size, extension, collect,
+                              0, n_steps)
+            stats["chunks"] += 1
+            return {"out": fn(*args, sarrs), "args": args, "caps": used,
+                    "offset": offset}
+
+        def accumulate(start: int, upto: int, acc_from: int, totals, kepts):
+            """Fold one window's step counters into the run stats."""
+            if upto <= acc_from:
+                return
+            t_np = np.asarray(totals)
+            k_np = np.asarray(kepts)
+            for si in range(max(start, acc_from), min(upto, n_steps)):
+                ii = si - start
+                if t_np[ii] >= 0:
+                    stats["step_rows"][si] += int(t_np[ii])
+                if k_np[ii] >= 0:
+                    stats["step_kept"][si] += int(k_np[ii])
+
+        def drain(rec: dict) -> None:
+            nonlocal total
+            b, p, org, count, ovf_step, totals, kepts = rec["out"]
+            used = list(rec["caps"])
+            start = 0
+            acc_from = 0
+            while True:
+                ovf = int(ovf_step)  # device sync for this chunk's scalars
+                accumulate(start, ovf, acc_from, totals, kepts)
+                acc_from = max(acc_from, min(ovf, n_steps))
+                if ovf >= n_steps:
+                    break
+                stats["step_retries"][ovf] += 1
+                if opts.suffix_resume:
+                    # re-enter from the overflowing step only: the frozen
+                    # table returned by the chunk program is exactly that
+                    # step's input
+                    new_caps = _grow_caps(list(used), ovf, opts.max_cap)
+                    n_in = used[ovf - 1] if ovf > 0 else chunk_size
+                    fn = self._get_fn(plan, tuple(new_caps), n_in, True,
+                                      collect, ovf, n_steps)
+                    b, p, org, count, ovf_step, totals, kepts = fn(
+                        b[:n_in], count, p[:n_in], org[:n_in], sarrs)
+                    start = ovf
+                    acc_from = ovf
+                    stats["resumes"] += 1
+                else:
+                    # legacy: double every capacity, redo the whole chunk
+                    if used[ovf] >= opts.max_cap:
+                        raise RuntimeError(
+                            f"binding-table overflow at max capacity "
+                            f"{opts.max_cap}; raise ExecOpts.max_cap")
+                    new_caps = [min(opts.max_cap, c * 2) for c in used]
+                    fn = self._get_fn(plan, tuple(new_caps), chunk_size,
+                                      extension, collect, 0, n_steps)
+                    b, p, org, count, ovf_step, totals, kepts = fn(
+                        *rec["args"], sarrs)
+                    start = 0
+                used = new_caps
+                # persist the learned schedule for subsequent chunks
+                shared = self._caps_cache[caps_key]
+                for si in range(n_steps):
+                    shared[si] = max(shared[si], used[si])
+            c = int(count)
+            total += c
+            if collect == "bindings" and c:
+                out_b.append(np.asarray(b[:c]))
+                out_p.append(np.asarray(p[:c]))
+                o = np.asarray(org[:c])
+                if not extension:
+                    o = o + rec["offset"]  # chunk-local start index -> global
+                out_o.append(o)
+
+        pending: deque[dict] = deque()
+        max_inflight = max(1, int(opts.async_chunks))
         offset = 0
-        cap = cap0
         while offset < n_src:
             hi = min(offset + chunk_size, n_src)
-            n_real = hi - offset
-            while True:
-                if not extension:
-                    chunk = np.full(chunk_size, -1, dtype=np.int32)
-                    chunk[:n_real] = plan.start_candidates[offset:hi]
-                    args = (jnp.asarray(chunk), jnp.int32(n_real),
-                            jnp.zeros((chunk_size, max(1, plan.n_pvars)), jnp.int32),
-                            jnp.zeros((chunk_size,), jnp.int32))
-                else:
-                    bpad = np.full((chunk_size, nq), -1, dtype=np.int32)
-                    bpad[:n_real] = b0[offset:hi]
-                    ppad = np.full((chunk_size, max(1, plan.n_pvars)), -1, np.int32)
-                    ppad[:n_real, : p0.shape[1]] = p0[offset:hi]
-                    opad = np.full(chunk_size, -1, dtype=np.int32)
-                    opad[:n_real] = org0[offset:hi]
-                    args = (jnp.asarray(bpad), jnp.int32(n_real),
-                            jnp.asarray(ppad), jnp.asarray(opad))
-                fn = self._get_fn(plan, cap, chunk_size, extension)
-                b, p, org, count, overflow = fn(*args, sarrs)
-                if bool(overflow):
-                    if cap >= opts.max_cap:
-                        raise RuntimeError(
-                            f"binding-table overflow at max capacity {opts.max_cap};"
-                            " raise ExecOpts.max_cap")
-                    cap = min(opts.max_cap, cap * 2)
-                    retried += 1
-                    continue
-                c = int(count)
-                total += c
-                if collect == "bindings" and c:
-                    out_b.append(np.asarray(b[:c]))
-                    out_p.append(np.asarray(p[:c]))
-                    o = np.asarray(org[:c])
-                    if not extension:
-                        o = o + offset  # chunk-local start index -> global
-                    out_o.append(o)
-                break
+            if profile and n_steps:
+                self._run_profiled_chunk(plan, sarrs, offset, hi, chunk_size,
+                                         extension, collect, caps_key, stats,
+                                         host_args, drain)
+            else:
+                pending.append(dispatch(offset, hi))
+                if len(pending) >= max_inflight:
+                    drain(pending.popleft())
             offset = hi
+        while pending:
+            drain(pending.popleft())
 
+        stats["caps"] = list(self._caps_cache[caps_key])
+        stats["wall_ms"] = (time.perf_counter() - t_run0) * 1e3
         bindings = (np.concatenate(out_b) if out_b else _empty(plan)) \
             if collect == "bindings" else None
         pb = (np.concatenate(out_p) if out_p else _empty_p(plan)) \
             if collect == "bindings" else None
         origins = np.concatenate(out_o) if out_o else np.zeros(0, np.int32)
-        return Result(total, bindings, pb, origins, chunks_retried=retried)
+        # one overflow event == one step retry, in every execution mode
+        return Result(total, bindings, pb, origins,
+                      chunks_retried=sum(stats["step_retries"]), stats=stats)
+
+    def _run_profiled_chunk(self, plan, sarrs, offset, hi, chunk_size,
+                            extension, collect, caps_key, stats, host_args,
+                            drain) -> None:
+        """Step-at-a-time execution of one chunk with host syncs, filling
+        per-step wall times; overflow handling is inherently suffix-resume
+        (each window re-runs alone with a doubled capacity)."""
+        opts = self.opts
+        n_steps = len(plan.steps)
+        caps = self._caps_cache[caps_key]
+        args = host_args(offset, hi)
+        state = None
+        stats["chunks"] += 1
+        for si in range(n_steps):
+            while True:
+                used = tuple(caps)
+                n_in = chunk_size if si == 0 else used[si - 1]
+                fn = self._get_fn(plan, used, n_in, extension or si > 0,
+                                  collect, si, si + 1)
+                t0 = time.perf_counter()
+                if si == 0:
+                    out = fn(*args, sarrs)
+                else:
+                    b, p, org, count = state
+                    out = fn(b[:n_in], count, p[:n_in], org[:n_in], sarrs)
+                jax.block_until_ready(out)
+                stats["step_wall_ms"][si] += (time.perf_counter() - t0) * 1e3
+                b, p, org, count, ovf_step, totals, kepts = out
+                if int(ovf_step) >= n_steps:
+                    if int(totals[0]) >= 0:
+                        stats["step_rows"][si] += int(totals[0])
+                    if int(kepts[0]) >= 0:
+                        stats["step_kept"][si] += int(kepts[0])
+                    state = (b, p, org, count)
+                    break
+                stats["step_retries"][si] += 1
+                stats["resumes"] += 1
+                _grow_caps(caps, si, opts.max_cap)
+        # hand the finished table to the shared collection path (the -1
+        # counter vectors mean "already accumulated above")
+        b, p, org, count = state
+        rec = {"out": (b, p, org, count, jnp.int32(n_steps),
+                       jnp.full(n_steps, -1, jnp.int32),
+                       jnp.full(n_steps, -1, jnp.int32)),
+               "args": args, "caps": tuple(caps), "offset": offset}
+        drain(rec)
 
 
 def _empty(plan: ExecPlan) -> np.ndarray:
@@ -510,6 +832,3 @@ def _empty(plan: ExecPlan) -> np.ndarray:
 def _empty_p(plan: ExecPlan) -> np.ndarray:
     return np.zeros((0, max(1, plan.n_pvars)), dtype=np.int32)
 
-
-def _next_pow2(x: int) -> int:
-    return 1 << max(3, (max(1, x) - 1).bit_length())

@@ -147,6 +147,7 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
     start_vertex = comp_starts[comp_rank[0]]
     start_candidates = cm.candidates(q, start_vertex)
     est_fanout: list[float] = []
+    est_expand: list[float] = []
     est_rows: list[float] = []
     rows = 1.0
     bound_pvars: dict[int, int] = {}  # pvar idx -> order position bound
@@ -169,6 +170,7 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
                               optional_group=optional_groups.get(s, -1),
                               restart_candidates=cands))
             est_fanout.append(float(max(1, cands.shape[0])))
+            est_expand.append(float(max(1, cands.shape[0])))
             rows *= float(max(1, cands.shape[0]))
             est_rows.append(rows)
         placed.add(s)
@@ -205,7 +207,7 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
                                            optional_groups)
         # emit steps following `order`
         for w in order[1:]:
-            step, f_card = _emit_vertex_step(
+            step, f_card, f_raw = _emit_vertex_step(
                 g, cm, q, w, placed, adj, edge_used, num_filters,
                 optional_groups, use_nlf, use_deg, bound_pvars,
                 pos=len(global_order))
@@ -217,6 +219,8 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
                 f_presize = cm.stats.sampled_fanout(step.elabel, step.forward,
                                                     cands)
             est_fanout.append(f_card if f_presize is None else f_presize)
+            est_expand.append(f_raw if f_presize is None
+                              else max(f_raw, f_presize))
             rows *= max(f_card, 1e-3)
             est_rows.append(rows)
             placed.add(w)
@@ -241,6 +245,7 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
         order=global_order,
         n_pvars=len(q.pvars),
         est_fanout=est_fanout,
+        est_expand=est_expand,
         est_rows=est_rows,
         search=search,
     )
@@ -289,17 +294,19 @@ def _build_extension(g, cm: CostModel, q: QueryGraph, prebound: int,
     edge_used = [False] * len(q.edges)
     global_order = list(range(prebound))
     est_fanout: list[float] = []
+    est_expand: list[float] = []
     est_rows: list[float] = []
     rows = 1.0  # per-base-row multiplier: base table size is a runtime input
     # pvars of the base pattern are bound before any extension step runs
     bound_pvars: dict[int, int] = {i: -1 for i in range(prebound_pvars)}
     for w in order:
-        step, f_card = _emit_vertex_step(
+        step, f_card, f_raw = _emit_vertex_step(
             g, cm, q, w, placed, adj, edge_used, num_filters,
             optional_groups, use_nlf, use_deg, bound_pvars,
             pos=len(global_order))
         steps.append(step)
         est_fanout.append(f_card)
+        est_expand.append(f_raw)
         rows *= max(f_card, 1e-3)
         est_rows.append(rows)
         placed.add(w)
@@ -316,6 +323,7 @@ def _build_extension(g, cm: CostModel, q: QueryGraph, prebound: int,
         order=global_order,
         n_pvars=len(q.pvars),
         est_fanout=est_fanout,
+        est_expand=est_expand,
         est_rows=est_rows,
         search=search,
     )
@@ -330,10 +338,12 @@ def _emit_vertex_step(g, cm: CostModel, q: QueryGraph, w: int, placed: set[int],
                       adj, edge_used: list[bool], num_filters,
                       optional_groups, use_nlf, use_deg,
                       bound_pvars: dict[int, int],
-                      pos: int) -> tuple[Step, float]:
+                      pos: int) -> tuple[Step, float, float]:
     """Emit the expansion step binding ``w`` from the placed set: cheapest
-    tree edge plus every now-resolvable non-tree check.  Returns the step
-    and its cost-model cardinality fanout.
+    tree edge plus every now-resolvable non-tree check.  Returns the step,
+    its cost-model cardinality fanout (rows surviving the step's filters
+    per input row), and the raw expansion factor (candidates produced per
+    input row before filtering — the executor's capacity requirement).
 
     An edge whose predicate variable is not yet bound MUST be the tree edge
     (the executor's non-tree check rejects rows with unbound M_e), so such
@@ -363,6 +373,7 @@ def _emit_vertex_step(g, cm: CostModel, q: QueryGraph, w: int, placed: set[int],
     forward = e.u != w  # parent --> w when parent is subject
     parent = e.u if forward else e.v
     f_card = cm.edge_cost(q, best_ei, parent)
+    f_raw = cm.stats.avg_fanout(e.elabel, forward)
     if e.pvar is not None:
         bound_pvars.setdefault(_pvar_idx(q, e), pos)
     # non-tree edges resolvable now (both endpoints placed after adding w)
@@ -401,7 +412,7 @@ def _emit_vertex_step(g, cm: CostModel, q: QueryGraph, w: int, placed: set[int],
         num_filters=tuple(num_filters.get(qv.var or "", ())),
         optional_group=optional_groups.get(w, -1),
     )
-    return step, f_card
+    return step, f_card, f_raw
 
 
 def _require_bound_pvar(q: QueryGraph, e, bound_pvars: dict[int, int],

@@ -74,6 +74,10 @@ class ExecPlan:
     unsat: bool = False
     # estimated fanout per step (for capacity presizing)
     est_fanout: list[float] = field(default_factory=list)
+    # raw per-step expansion factor (candidates produced per input row
+    # BEFORE filtering) — what the executor's per-step capacity schedule
+    # must hold, as opposed to ``est_fanout`` (rows surviving the filters)
+    est_expand: list[float] = field(default_factory=list)
     # planner diagnostics (explain() / metrics; not part of the signature)
     est_rows: list[float] = field(default_factory=list)  # cumulative, per step
     search: str = "greedy"  # which order search produced this plan
@@ -98,6 +102,44 @@ class ExecPlan:
             self.n_pvars,
         )
 
+    def capacity_schedule(self, chunk: int, init_cap: int, max_cap: int,
+                          slack: float = 1.0) -> tuple[int, ...]:
+        """Per-step binding-table capacities for a chunk of ``chunk`` rows.
+
+        ``caps[i]`` bounds the candidates step ``i`` may expand to; it is
+        derived from the cumulative row estimate times the step's raw
+        expansion factor (``est_expand``), widened by ``slack``, rounded up
+        to a power of two (bounding executor recompiles to pow2 buckets),
+        floored at ``min(init_cap, max_cap)``, and made monotone
+        non-decreasing so an overflow-frozen table can always be carried
+        forward losslessly.  Estimation errors are corrected at run time by
+        the executor's suffix-resume doubling, so these are starting
+        points, not guarantees.
+        """
+        cap_in = _next_pow2(chunk)
+        floor = max(cap_in, min(_next_pow2(init_cap), max_cap))
+        caps: list[int] = []
+        # the planner's cumulative row estimates are for the full start set;
+        # scale them down to one chunk (extension plans have no start set —
+        # their est_rows are per-input-row multipliers, i.e. n0 == 1)
+        n0 = max(1, self.start_candidates.shape[0])
+        scale = chunk / n0 if self.start_candidates.shape[0] else float(chunk)
+        rows = float(chunk)
+        prev = floor
+        for i in range(len(self.steps)):
+            raw = self.est_expand[i] if i < len(self.est_expand) else 1.0
+            need = rows * max(raw, 1.0) * slack
+            c = _next_pow2(int(min(need, float(max_cap))))
+            c = min(max_cap, max(prev, c))
+            caps.append(c)
+            prev = c
+            if i < len(self.est_rows):
+                rows = max(1.0, self.est_rows[i] * scale)
+            else:
+                f = self.est_fanout[i] if i < len(self.est_fanout) else 1.0
+                rows = max(1.0, rows * min(max(f, 1e-3), 256.0))
+        return tuple(caps)
+
     def estimated_rows(self) -> float:
         """Final estimated result cardinality.  A plan with no steps (point
         query / pure extension) is exactly its start-candidate count."""
@@ -106,6 +148,10 @@ class ExecPlan:
         if self.est_rows:
             return self.est_rows[-1]
         return float(max(1, self.start_candidates.shape[0]))
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(3, (max(1, x) - 1).bit_length())
 
 
 def np_cmp(vals: np.ndarray, op: str, c: float) -> np.ndarray:

@@ -170,20 +170,42 @@ class SparqlEngine:
             self._plan_cache.put(canon.fingerprint, compiled)
         return (compiled, fresh) if with_fresh else compiled
 
-    def execute_compiled(self, compiled: CompiledQuery) -> QueryResult:
-        """Run a compiled query; result columns keep its variable names."""
+    def execute_compiled(self, compiled: CompiledQuery,
+                         collect: str = "bindings",
+                         profile: bool = False) -> QueryResult:
+        """Run a compiled query; result columns keep its variable names.
+
+        ``collect="count"`` lets branches without OPTIONALs or post-hoc
+        filters run the executor's count-only path (no binding-table
+        materialization or device→host transfer); the result then has an
+        exact ``count`` but empty ``rows``.  ``profile=True`` executes with
+        per-step host syncs to fill per-step wall times in the stats."""
         all_rows: list[np.ndarray] = []
+        total = 0
+        exec_stats: list[dict] = []
+        step_card: list[tuple[float, int]] = []
         variables, kinds = compiled.variables, compiled.kinds
         for br in compiled.branches:
-            rows = self._exec_branch(br)
-            if br.variables != variables:
-                rows = _align_columns(rows, br.variables, variables)
-            all_rows.append(rows)
+            rows, count, info = self._exec_branch(br, collect, profile)
+            total += count
+            exec_stats.append(info)
+            base = info.get("base") or {}
+            for est, actual in zip(br.plan.est_rows,
+                                   base.get("step_kept") or []):
+                step_card.append((float(est), int(actual)))
+            if rows is not None:
+                if br.variables != variables:
+                    rows = _align_columns(rows, br.variables, variables)
+                all_rows.append(rows)
         rows = np.concatenate(all_rows) if all_rows else np.zeros((0, 0), np.int32)
+        if collect == "bindings":
+            total = int(rows.shape[0])
         return QueryResult(list(variables), rows, list(kinds),
-                           count=int(rows.shape[0]),
+                           count=total,
                            stats={"plan_ms": compiled.plan_ms,
-                                  "est_rows": compiled.estimated_rows()})
+                                  "est_rows": compiled.estimated_rows(),
+                                  "exec": {"branches": exec_stats},
+                                  "step_card": step_card})
 
     def query(self, sparql: str, collect: str = "bindings") -> QueryResult:
         ast = parse_sparql(sparql)
@@ -191,19 +213,29 @@ class SparqlEngine:
 
     def query_ast(self, ast: SelectQuery, collect: str = "bindings") -> QueryResult:
         compiled, canon = self.compile(ast)
-        res = self.execute_compiled(compiled)
+        res = self.execute_compiled(compiled, collect=collect)
         res.variables = canon.restore(res.variables)
         return res
 
     def count(self, sparql: str) -> int:
-        return self.query(sparql).count
+        return self.query(sparql, collect="count").count
 
-    def explain(self, source: str | SelectQuery) -> dict:
+    def explain(self, source: str | SelectQuery,
+                analyze: bool = False) -> dict:
         """Describe the (possibly cached) plan for a query without running
         it: matching order, chosen start vertex, and per-step fanout /
-        cardinality estimates, with the caller's variable names."""
+        cardinality estimates, with the caller's variable names.
+
+        ``analyze=True`` additionally *executes* the query in profiled mode
+        and annotates every step with its measured expansion total,
+        surviving rows, overflow retries, and wall time — the
+        estimate-vs-actual view (SQL's EXPLAIN ANALYZE)."""
         compiled, canon = self.compile(source)
         inverse = canon.inverse
+        run_stats = None
+        if analyze:
+            res = self.execute_compiled(compiled, profile=True)
+            run_stats = res.stats
 
         def restore_names(obj):
             if isinstance(obj, str) and obj.startswith("?"):
@@ -215,18 +247,28 @@ class SparqlEngine:
             return obj
 
         branches = []
-        for br in compiled.branches:
+        for bi, br in enumerate(compiled.branches):
             b = explain_plan(br.plan, self.maps)
             b["optionals"] = [explain_plan(co.plan, self.maps)
                               for co in br.optionals]
+            if run_stats is not None:
+                binfo = run_stats["exec"]["branches"][bi]
+                _annotate_steps(b, binfo.get("base"))
+                for oi, od in enumerate(b["optionals"]):
+                    opts_info = binfo.get("optionals") or []
+                    if oi < len(opts_info):
+                        _annotate_steps(od, opts_info[oi])
             branches.append(restore_names(b))
-        return {
+        out = {
             "fingerprint": compiled.fingerprint,
             "estimate": self.estimate,
             "plan_ms": round(compiled.plan_ms, 3),
             "est_total_rows": round(compiled.estimated_rows(), 1),
             "branches": branches,
         }
+        if run_stats is not None:
+            out["actual_rows"] = res.count
+        return out
 
     # --------------------------------------------------------- compilation
     def _compile_ast(self, ast: SelectQuery, fingerprint: str) -> CompiledQuery:
@@ -278,13 +320,27 @@ class SparqlEngine:
                               variables=variables, kinds=kinds)
 
     # ------------------------------------------------------------ execution
-    def _exec_branch(self, br: CompiledBranch) -> np.ndarray:
-        res = self.executor.run(br.plan)
+    def _exec_branch(self, br: CompiledBranch, collect: str = "bindings",
+                     profile: bool = False):
+        """Run one branch; returns ``(rows | None, count, exec_stats)``."""
+        count_only = (collect == "count" and not br.optionals
+                      and not br.expensive)
+        res = self.executor.run(
+            br.plan, collect="count" if count_only else "bindings",
+            profile=profile)
+        info: dict = {"base": res.stats}
+        if count_only:
+            return None, res.count, info
         table, ptable, _ = self._apply_expensive(res.bindings,
                                                  res.pvar_bindings,
                                                  br.q, br.expensive)
+        opt_stats: list[dict] = []
         for co in br.optionals:
-            table, ptable = self._exec_left_join(table, ptable, co)
+            table, ptable, ost = self._exec_left_join(table, ptable, co,
+                                                      profile)
+            opt_stats.append(ost)
+        if opt_stats:
+            info["optionals"] = opt_stats
         q_all = br.q_all
         cols: list[np.ndarray] = []
         for var in br.variables:
@@ -294,8 +350,9 @@ class SparqlEngine:
                 cols.append(ptable[:, q_all.pvars.index(var)])
             else:
                 cols.append(np.full(table.shape[0], -1, np.int32))
-        return np.stack(cols, axis=1) if cols else np.zeros(
+        rows = np.stack(cols, axis=1) if cols else np.zeros(
             (table.shape[0], 0), np.int32)
+        return rows, int(rows.shape[0]), info
 
     # ----------------------------------------------------------- internals
     def _expand_unions(self, g: GroupPattern) -> list[GroupPattern]:
@@ -318,7 +375,7 @@ class SparqlEngine:
         return branches
 
     def _exec_left_join(self, table: np.ndarray, ptable: np.ndarray,
-                        co: CompiledOptional):
+                        co: CompiledOptional, profile: bool = False):
         """Left-outer join a compiled OPTIONAL extension onto the table."""
         q_ext, plan, expensive = co.q_ext, co.plan, co.expensive
         nq_ext = q_ext.n_vertices
@@ -332,7 +389,8 @@ class SparqlEngine:
                              np.zeros((0, max(1, len(q_ext.pvars))), np.int32),
                              np.zeros(0, np.int32))
         else:
-            matched = self.executor.run(plan, initial=(b0, p0, org0))
+            matched = self.executor.run(plan, initial=(b0, p0, org0),
+                                        profile=profile)
         mt, mp, morg = self._apply_expensive(matched.bindings,
                                              matched.pvar_bindings,
                                              q_ext, expensive,
@@ -348,7 +406,7 @@ class SparqlEngine:
         un_p[:, : ptable.shape[1]] = ptable[unmatched]
         new_table = np.concatenate([mt, un_b], axis=0)
         new_ptable = np.concatenate([mp, un_p], axis=0)
-        return new_table, new_ptable
+        return new_table, new_ptable, matched.stats
 
     def _apply_expensive(self, table, ptable, q: QueryGraph, filters,
                          origins=None):
@@ -384,6 +442,31 @@ class SparqlEngine:
 
 
 # --------------------------------------------------------------------------
+
+
+def _annotate_steps(plan_desc: dict, exec_stats: dict | None) -> None:
+    """Merge one executor run's per-step counters into an explain_plan
+    description (in place) — the EXPLAIN ANALYZE view."""
+    if not exec_stats:
+        return
+    for i, rec in enumerate(plan_desc.get("steps", [])):
+        for src, dst in (("step_rows", "actual_expanded"),
+                         ("step_kept", "actual_rows"),
+                         ("step_retries", "retries")):
+            vals = exec_stats.get(src)
+            if vals is not None and i < len(vals):
+                rec[dst] = int(vals[i])
+        wall = exec_stats.get("step_wall_ms")
+        if wall is not None and i < len(wall):
+            rec["wall_ms"] = round(float(wall[i]), 3)
+        caps = exec_stats.get("caps")
+        if caps and i < len(caps):
+            rec["capacity"] = int(caps[i])
+    plan_desc["exec"] = {
+        "chunks": exec_stats.get("chunks", 0),
+        "resumes": exec_stats.get("resumes", 0),
+        "wall_ms": round(float(exec_stats.get("wall_ms", 0.0)), 3),
+    }
 
 
 def _col_values(term, table, q: QueryGraph, g):

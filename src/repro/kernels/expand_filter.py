@@ -1,0 +1,159 @@
+"""Fused expand/filter/compact kernel: the executor's hottest step in one
+VMEM pass.
+
+Each binding-table step is a ragged CSR expansion (every surviving row
+emits ``deg[i]`` candidate vertices), a label filter (packed-bitmap
+superset probe per candidate), and a compaction of survivors to a prefix.
+The reference path materializes 6+ capacity-sized intermediates (row ids,
+within-row offsets, validity, gathered neighbors, gathered bitmap words,
+scatter positions) in HBM between XLA ops.  This kernel streams one output
+tile at a time through VMEM instead:
+
+  1. binary-search the exclusive-cumsum ``offs`` to map output slots to
+     source rows (the SIMT searchsorted trick, same shape as edge_exists),
+  2. gather the candidate ``v = nbr[start[row] + j]`` and its label words,
+  3. evaluate the superset / bound-id tests in registers,
+  4. compact survivors inside the tile by sorting on the local prefix-sum
+     rank, then append the tile to the global output at a running base
+     carried across the (sequential) grid in SMEM scratch.
+
+Tiles overwrite the junk tails of their predecessors, so the output is a
+dense prefix of survivors followed by ``-1`` padding — exactly the layout
+``_compact`` produces, with no capacity-sized scratch in HBM.
+
+nbr: int32 [m], bitmap: uint32 [V, W], start/deg/offs: int32 [R],
+label_mask: uint32 [W], bound_id: int32 [1]
+→ (v_out int32 [capacity], row_out int32 [capacity], count int32 [1]).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# VMEM word budgets: adjacency + bitmap + row arrays must all be resident.
+# ops.py falls back to the jnp reference above these bounds.
+VMEM_NBR_BOUND = 1 << 20
+VMEM_BITMAP_BOUND = 1 << 20
+VMEM_ROWS_BOUND = 1 << 19
+
+
+def _kernel(nbr_ref, bm_ref, start_ref, deg_ref, offs_ref, mask_ref, bid_ref,
+            v_ref, r_ref, cnt_ref, base_ref, *, tile: int, n_iters: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        base_ref[0] = 0
+
+    nbr = nbr_ref[...]
+    offs = offs_ref[...]
+    r_rows = offs.shape[0]
+    m = nbr.shape[0]
+    k0 = i * tile
+    k = k0 + jax.lax.broadcasted_iota(jnp.int32, (tile, 1), 0).reshape(tile)
+
+    # row[k] = rightmost i with offs[i] <= k (offs[0] == 0, so row >= 0)
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) >> 1
+        le = jnp.take(offs, jnp.clip(mid, 0, r_rows - 1)) <= k
+        return jnp.where(le, mid + 1, lo), jnp.where(le, hi, mid)
+
+    lo_f, _ = jax.lax.fori_loop(
+        0, n_iters, body,
+        (jnp.zeros((tile,), jnp.int32), jnp.full((tile,), r_rows, jnp.int32)))
+    row = jnp.clip(lo_f - 1, 0, r_rows - 1)
+
+    d_row = jnp.take(deg_ref[...], row)
+    j = k - jnp.take(offs, row)
+    total = offs[r_rows - 1] + deg_ref[r_rows - 1]
+    valid = (k < total) & (j >= 0) & (j < d_row)
+
+    idx = jnp.clip(jnp.take(start_ref[...], row) + j, 0, m - 1)
+    v = jnp.where(valid, jnp.take(nbr, idx), -1)
+
+    bm = bm_ref[...]  # [V, W]
+    req = mask_ref[...]  # [1, W]
+    words = jnp.take(bm, jnp.clip(v, 0, bm.shape[0] - 1), axis=0)  # [tile, W]
+    ok = valid & jnp.all((words & req) == req, axis=-1)
+    bid = bid_ref[0]
+    ok &= (bid < 0) | (v == bid)
+
+    # intra-tile compaction: rank survivors by local prefix sum, sort the
+    # (rank, v, row) triple so survivors land in the first local_count lanes
+    oki = ok.astype(jnp.int32)
+    rank = jnp.cumsum(oki) - 1
+    local_count = jnp.sum(oki)
+    key = jnp.where(ok, rank, tile)
+    _, v_s, r_s = jax.lax.sort(
+        (key, jnp.where(ok, v, -1), jnp.where(ok, row, -1)),
+        num_keys=1, is_stable=True)
+
+    # fill own slot range first (junk beyond the final count must read -1),
+    # then append the compacted tile at the running base.  base <= k0, so
+    # neither write can clobber an earlier tile's survivors.
+    v_ref[pl.ds(k0, tile)] = jnp.full((tile,), -1, jnp.int32)
+    r_ref[pl.ds(k0, tile)] = jnp.full((tile,), -1, jnp.int32)
+    base = base_ref[0]
+    v_ref[pl.ds(base, tile)] = v_s
+    r_ref[pl.ds(base, tile)] = r_s
+    base_ref[0] = base + local_count
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _():
+        cnt_ref[0] = base + local_count
+
+
+@partial(jax.jit, static_argnames=("capacity", "interpret", "tile"))
+def expand_filter_compact_pallas(
+    nbr: jax.Array,
+    bitmap: jax.Array,
+    start: jax.Array,
+    deg: jax.Array,
+    offs: jax.Array,
+    label_mask: jax.Array,
+    bound_id: jax.Array,
+    *,
+    capacity: int,
+    interpret: bool = False,
+    tile: int = 512,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    (r,) = offs.shape
+    w = bitmap.shape[1]
+    t = min(tile, max(8, capacity))
+    cap_p = capacity + (-capacity) % t
+    n_iters = max(1, r).bit_length() + 1
+    v_out, r_out, cnt = pl.pallas_call(
+        partial(_kernel, tile=t, n_iters=n_iters),
+        out_shape=(
+            jax.ShapeDtypeStruct((cap_p,), jnp.int32),
+            jax.ShapeDtypeStruct((cap_p,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ),
+        grid=(cap_p // t,),
+        in_specs=[
+            pl.BlockSpec(nbr.shape, lambda i: (0,)),
+            pl.BlockSpec(bitmap.shape, lambda i: (0, 0)),
+            pl.BlockSpec(start.shape, lambda i: (0,)),
+            pl.BlockSpec(deg.shape, lambda i: (0,)),
+            pl.BlockSpec(offs.shape, lambda i: (0,)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((cap_p,), lambda i: (0,)),
+            pl.BlockSpec((cap_p,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(nbr.astype(jnp.int32), bitmap, start.astype(jnp.int32),
+      deg.astype(jnp.int32), offs.astype(jnp.int32),
+      label_mask.reshape(1, w),
+      jnp.asarray(bound_id, jnp.int32).reshape(1))
+    return v_out[:capacity], r_out[:capacity], cnt[0]

@@ -81,3 +81,22 @@ def segment_gather_sum(table, indices, segments, num_segments, weights=None):
 def ragged_expand(offsets, degrees, capacity: int):
     # pure-jnp always: the searchsorted lowers well on all backends
     return _ref.ragged_expand_ref(offsets, degrees, capacity)
+
+
+def expand_filter_compact(nbr, bitmap, start, deg, offs, label_mask, bound_id,
+                          capacity: int):
+    """Fused ragged expansion + label filter + compaction (the executor's
+    per-step hot path).  Returns ``(v_out, row_out, count)``; see
+    :func:`repro.kernels.ref.expand_filter_compact_ref` for semantics."""
+    if _use_pallas():
+        from repro.kernels import expand_filter as _ef
+
+        if (nbr.shape[0] <= _ef.VMEM_NBR_BOUND
+                and bitmap.size <= _ef.VMEM_BITMAP_BOUND
+                and offs.shape[0] <= _ef.VMEM_ROWS_BOUND
+                and capacity <= _ef.VMEM_ROWS_BOUND):
+            return _ef.expand_filter_compact_pallas(
+                nbr, bitmap, start, deg, offs, label_mask, bound_id,
+                capacity=capacity, interpret=_interpret())
+    return _ref.expand_filter_compact_ref(nbr, bitmap, start, deg, offs,
+                                          label_mask, bound_id, capacity)

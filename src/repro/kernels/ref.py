@@ -79,6 +79,40 @@ def segment_gather_sum_ref(
     return jax.ops.segment_sum(rows, segments, num_segments=num_segments)
 
 
+def expand_filter_compact_ref(
+    nbr: jax.Array,  # int32 [m]     CSR adjacency values
+    bitmap: jax.Array,  # uint32 [V, W] packed vertex-label words
+    start: jax.Array,  # int32 [R]    per-row adjacency slice start
+    deg: jax.Array,  # int32 [R]      per-row slice length
+    offs: jax.Array,  # int32 [R]     exclusive cumsum of deg
+    label_mask: jax.Array,  # uint32 [W] required label words (0 = no filter)
+    bound_id: jax.Array,  # int32 []   required vertex id (< 0 = no check)
+    capacity: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused ragged CSR expansion + label-bitmap filter + compaction.
+
+    Logical candidate stream = concat over rows i of
+    ``nbr[start[i] : start[i] + deg[i]]``; each candidate v survives iff
+    ``(bitmap[v] & label_mask) == label_mask`` and (when ``bound_id >= 0``)
+    ``v == bound_id``.  Survivors are compacted to a prefix, preserving
+    stream order.  Returns ``(v_out, row_out, count)`` each sized
+    ``capacity`` / scalar: slot k < count holds surviving candidate
+    ``v_out[k]`` produced by input row ``row_out[k]``; slots >= count are
+    ``-1``.  Slots beyond ``capacity`` are dropped (the caller detects that
+    via its own total-vs-capacity overflow check).
+    """
+    row, j, valid = ragged_expand_ref(offs, deg, capacity)
+    idx = jnp.clip(start[row] + j, 0, max(1, nbr.shape[0]) - 1)
+    v = jnp.where(valid, nbr[idx], -1)
+    vsafe = jnp.clip(v, 0, bitmap.shape[0] - 1)
+    ok = valid & bitmap_superset_ref(bitmap[vsafe], label_mask)
+    ok &= (bound_id < 0) | (v == bound_id)
+    pos = jnp.where(ok, jnp.cumsum(ok.astype(jnp.int32)) - 1, capacity)
+    v_out = jnp.full((capacity + 1,), -1, jnp.int32).at[pos].set(v)[:capacity]
+    row_out = jnp.full((capacity + 1,), -1, jnp.int32).at[pos].set(row)[:capacity]
+    return v_out, row_out, jnp.sum(ok.astype(jnp.int32))
+
+
 def ragged_expand_ref(
     offsets: jax.Array,  # int32 [R] exclusive cumsum of per-row degrees
     degrees: jax.Array,  # int32 [R]

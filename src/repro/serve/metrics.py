@@ -213,6 +213,14 @@ class ServeMetrics:
             "repro_cardinality_error_log10",
             "abs log10 ratio of planner-estimated to actual result rows",
             buckets=(0.1, 0.25, 0.5, 1.0, 2.0, 3.0, math.inf))
+        self.step_card_error = r.histogram(
+            "repro_step_cardinality_error_log10",
+            "abs log10 ratio of per-step estimated to actual binding-table "
+            "rows (feeds the executor capacity schedule)",
+            buckets=(0.1, 0.25, 0.5, 1.0, 2.0, 3.0, math.inf))
+        self.exec_retries = r.counter(
+            "repro_exec_step_retries_total",
+            "executor capacity overflows (suffix-resume re-entries)")
         self._completions: deque[float] = deque(maxlen=65536)
         self._started = time.monotonic()
         self._lock = threading.Lock()
@@ -232,6 +240,13 @@ class ServeMetrics:
         perfect estimate, 1 is an order of magnitude off either way."""
         err = abs(math.log10((max(0.0, estimated) + 1.0) / (actual + 1.0)))
         self.card_error.observe(err)
+
+    def record_step_cardinality(self, estimated: float, actual: int) -> None:
+        """Per-plan-step estimate-vs-actual row error (same log10 scale).
+        Large values here mean the executor's capacity schedule starts from
+        bad guesses and leans on suffix-resume doublings."""
+        err = abs(math.log10((max(0.0, estimated) + 1.0) / (actual + 1.0)))
+        self.step_card_error.observe(err)
 
     def _qps(self) -> float:
         now = time.monotonic()

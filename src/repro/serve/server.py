@@ -133,6 +133,16 @@ class DatasetRegistry:
         est = res.stats.get("est_rows")
         if est is not None:
             self.metrics.record_cardinality(est, res.count)
+        for step_est, step_actual in res.stats.get("step_card", ()):
+            self.metrics.record_step_cardinality(step_est, step_actual)
+        exec_stats = res.stats.get("exec") or {}
+        retries = sum(
+            sum(part.get("step_retries", ()))
+            for br in exec_stats.get("branches", ())
+            for part in ([br.get("base") or {}]
+                         + list(br.get("optionals") or ())))
+        if retries:
+            self.metrics.exec_retries.inc(retries)
         if ds.result_cache.enabled and version == ds.version:
             ds.result_cache.put(key, res)
         return res
@@ -151,10 +161,12 @@ class DatasetRegistry:
                limit: int | None = None) -> list[dict]:
         return res.decode(self.get(name).maps, limit=limit)
 
-    def explain(self, name: str, sparql: str) -> dict:
+    def explain(self, name: str, sparql: str, analyze: bool = False) -> dict:
         """Describe the plan (order, start vertex, per-step estimates)
-        without executing; compiles through the shared plan cache."""
-        return self.get(name).engine.explain(sparql)
+        without executing; compiles through the shared plan cache.
+        ``analyze=True`` executes in profiled mode and adds per-step
+        actual rows / retries / wall times (``explain=analyze``)."""
+        return self.get(name).engine.explain(sparql, analyze=analyze)
 
     def stats(self) -> dict:
         out = {}
@@ -262,15 +274,24 @@ class _Handler(BaseHTTPRequestHandler):
             limit = int(params["limit"]) if "limit" in params else None
             timeout_s = (float(params["timeout_ms"]) / 1e3
                          if "timeout_ms" in params else None)
-            explain = str(params.get("explain", "")).lower() in ("1", "true",
-                                                                 "yes")
+            explain_param = str(params.get("explain", "")).lower()
+            explain = explain_param in ("1", "true", "yes", "analyze")
+            analyze = explain_param == "analyze"
         except (ValueError, UnknownDataset) as e:
             self._error(400, str(e))
             return
         if explain:
-            # plan description only — no execution, no scheduler round-trip
+            # plan description only — no scheduler round-trip.  analyze mode
+            # executes the query once, in profiled mode (deliberately slow:
+            # per-step host syncs), on this handler thread; it bypasses the
+            # scheduler, so a dedicated semaphore bounds how many profiled
+            # runs may be in flight — excess analyze requests get 503.
+            gate = self.server.analyze_gate if analyze else None
+            if gate is not None and not gate.acquire(blocking=False):
+                self._error(503, "too many explain=analyze runs in flight")
+                return
             try:
-                plan = registry.explain(dataset, query)
+                plan = registry.explain(dataset, query, analyze=analyze)
             except UnknownDataset as e:
                 self._error(404, f"unknown dataset: {e}")
             except (SparqlError, QueryBuildError, PlanError) as e:
@@ -280,6 +301,9 @@ class _Handler(BaseHTTPRequestHandler):
                 self._error(500, f"internal error: {e}")
             else:
                 self._send_json(200, {"dataset": dataset, "explain": plan})
+            finally:
+                if gate is not None:
+                    gate.release()
             return
         try:
             res = self.server.scheduler.submit(dataset, query,
@@ -312,6 +336,8 @@ class SparqlHTTPServer(ThreadingHTTPServer):
         self.registry = registry
         self.scheduler = scheduler
         self.metrics = scheduler.metrics
+        # at most this many profiled explain=analyze executions at once
+        self.analyze_gate = threading.BoundedSemaphore(2)
 
 
 def make_server(registry: DatasetRegistry, host: str = "127.0.0.1",

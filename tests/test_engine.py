@@ -153,6 +153,7 @@ def test_overflow_retry():
     opts = ExecOpts(init_cap=8, chunk=4)
     plan = build_plan(g, q)
     plan.est_fanout = []  # defeat capacity presizing: force the retry path
+    plan.est_expand = []
     ex = Executor(g, opts)
     res = ex.run(plan)
     ref = enumerate_matches(g, q)

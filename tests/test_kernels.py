@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.bitmap_filter import bitmap_superset_pallas
 from repro.kernels.edge_exists import edge_exists_pallas
+from repro.kernels.expand_filter import expand_filter_compact_pallas
 from repro.kernels.segment_gather import (segment_gather_fixed_pallas,
                                           segment_gather_sum_pallas)
 from repro.kernels.sorted_intersect import tile_membership_pallas
@@ -150,6 +151,70 @@ def test_segment_gather_ragged_entry():
     want = ref.segment_gather_sum_ref(table, indices, segments, s)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------- expand/filter/compact
+def _efc_case(rng, r, v, w, tile, with_mask, with_bid):
+    degs = rng.integers(0, 6, r).astype(np.int32)
+    offs = np.concatenate([[0], np.cumsum(degs)[:-1]]).astype(np.int32)
+    total = int(degs.sum())
+    m = max(1, total + int(rng.integers(0, 8)))
+    nbr = rng.integers(0, v, m).astype(np.int32)
+    start = rng.integers(0, max(1, m - 6), r).astype(np.int32)
+    bitmap = rng.integers(0, 2**32, (v, w), dtype=np.uint64).astype(np.uint32)
+    mask = (rng.integers(0, 2**3, w, dtype=np.uint64).astype(np.uint32)
+            if with_mask else np.zeros(w, np.uint32))
+    bid = np.int32(rng.integers(0, v)) if with_bid else np.int32(-1)
+    cap = tile * max(1, -(-max(1, total) // tile))  # multiple of tile ≥ total
+    return (jnp.asarray(nbr), jnp.asarray(bitmap), jnp.asarray(start),
+            jnp.asarray(degs), jnp.asarray(offs), jnp.asarray(mask),
+            jnp.asarray(bid)), cap
+
+
+@pytest.mark.parametrize("r,v,w,tile", [(1, 4, 1, 8), (17, 30, 2, 16),
+                                        (40, 64, 1, 32), (5, 8, 4, 8)])
+@pytest.mark.parametrize("with_mask,with_bid", [(False, False), (True, False),
+                                                (True, True)])
+def test_expand_filter_compact_shapes(r, v, w, tile, with_mask, with_bid):
+    rng = np.random.default_rng(r * 100 + v + w + tile)
+    args, cap = _efc_case(rng, r, v, w, tile, with_mask, with_bid)
+    got = expand_filter_compact_pallas(*args, capacity=cap, interpret=True,
+                                       tile=tile)
+    want = ref.expand_filter_compact_ref(*args, cap)
+    for g_, w_, name in zip(got, want, ("v_out", "row_out", "count")):
+        np.testing.assert_array_equal(np.asarray(g_), np.asarray(w_),
+                                      err_msg=name)
+
+
+@given(st.integers(1, 40), st.integers(2, 40), st.integers(1, 2),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_expand_filter_compact_property(r, v, w, seed):
+    """Pallas (interpret) vs oracle vs brute force on random ragged CSR
+    slices, label bitmaps, and bound-id probes."""
+    rng = np.random.default_rng(seed)
+    args, cap = _efc_case(rng, r, v, w, 16, with_mask=bool(seed % 2),
+                          with_bid=seed % 3 == 0)
+    nbr, bitmap, start, degs, offs, mask, bid = map(np.asarray, args)
+    got_v, got_r, got_c = expand_filter_compact_pallas(
+        *args, capacity=cap, interpret=True, tile=16)
+    # brute-force the survivor stream
+    stream = []
+    for i in range(r):
+        for j in range(degs[i]):
+            k = int(start[i]) + j
+            if k >= nbr.shape[0]:
+                continue
+            vv = int(nbr[k])
+            if not all((bitmap[vv] & mask) == mask):
+                continue
+            if int(bid) >= 0 and vv != int(bid):
+                continue
+            stream.append((vv, i))
+    assert int(got_c) == len(stream)
+    for k, (vv, rr) in enumerate(stream):
+        assert int(got_v[k]) == vv and int(got_r[k]) == rr
+    assert all(int(x) == -1 for x in np.asarray(got_v)[len(stream):])
 
 
 # ------------------------------------------------------------ ragged expand
