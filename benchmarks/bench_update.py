@@ -1,0 +1,158 @@
+"""Live-store benchmark: streaming ingest + query-under-update.
+
+Scenario: a LUBM dataset goes live with a fraction of its triples held
+back; the holdout arrives as a stream of insert batches (plus a trickle of
+deletes) while a fixed query mix keeps executing.  Two strategies answer
+the same workload:
+
+- ``delta``    — ``repro.store.VersionedStore``: each batch lands in the
+  delta overlay, queries run against cheap snapshots (base CSR + merged
+  delta, no rebuild); compaction is left to its threshold.
+- ``rebuild``  — the pre-store architecture: every batch triggers a full
+  ``type_aware_transform`` + engine rebuild (plan recompiles included,
+  because plans bake candidate sets of the dead graph).
+
+Reported per strategy: ingest throughput (triples/s of making a batch
+*queryable*), mean query latency during the stream, and end-to-end wall
+time.  The committed ``BENCH_update.json`` tracks the full-size run.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import SparqlEngine
+from repro.rdf.generator import generate_lubm
+from repro.rdf.transform import type_aware_transform
+from repro.rdf.triples import TripleStore
+from repro.rdf.workloads import LUBM_QUERIES
+
+QUERY_MIX = ("Q1", "Q2", "Q6", "Q9", "Q14")
+
+
+def _dataset(scale: int, density: float, holdout: float, seed: int):
+    full = generate_lubm(scale=scale, seed=0, density=density).finalize()
+    triples = list(full.iter_decoded())
+    onto = [t for t in triples if t[1] in ("rdf:type", "rdf:subClassOf")]
+    plain = [t for t in triples if t[1] not in ("rdf:type", "rdf:subClassOf")]
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(len(plain))
+    n_base = int(len(plain) * (1.0 - holdout))
+    base = onto + [plain[i] for i in idx[:n_base]]
+    stream = [plain[i] for i in idx[n_base:]]
+    dels = [plain[idx[i]] for i in
+            rng.choice(n_base, size=max(1, len(stream) // 10),
+                       replace=False)]
+    return base, stream, dels
+
+
+def _batches(stream, dels, n_batches):
+    ins_sz = max(1, len(stream) // n_batches)
+    del_sz = max(1, len(dels) // n_batches)
+    out = []
+    for i in range(n_batches):
+        out.append((stream[i * ins_sz: (i + 1) * ins_sz],
+                    dels[i * del_sz: (i + 1) * del_sz]))
+    return out
+
+
+def _run_queries(engine) -> float:
+    t0 = time.perf_counter()
+    for name in QUERY_MIX:
+        engine.query(LUBM_QUERIES[name])
+    return (time.perf_counter() - t0) / len(QUERY_MIX)
+
+
+def _delta_strategy(base, batches):
+    from repro.store import VersionedStore
+
+    st = TripleStore()
+    st.add_many(base)
+    g, maps = type_aware_transform(st.finalize())
+    store = VersionedStore(g, maps)
+    engine = SparqlEngine(store.snapshot(), maps)
+    _run_queries(engine)  # warm compile on the base snapshot
+    ingest_s = 0.0
+    q_lat = []
+    n_triples = 0
+    t_all = time.perf_counter()
+    for ins, dels in batches:
+        t0 = time.perf_counter()
+        store.insert_triples(ins)
+        store.delete_triples(dels)
+        engine.set_graph(store.snapshot())
+        ingest_s += time.perf_counter() - t0
+        n_triples += len(ins) + len(dels)
+        q_lat.append(_run_queries(engine))
+    wall = time.perf_counter() - t_all
+    return {"ingest_tps": n_triples / max(ingest_s, 1e-9),
+            "query_ms": float(np.mean(q_lat) * 1e3),
+            "wall_s": wall,
+            "compactions": store.counters["compactions"]}
+
+
+def _rebuild_strategy(base, batches):
+    current = list(base)
+    st = TripleStore()
+    st.add_many(current)
+    g, maps = type_aware_transform(st.finalize())
+    engine = SparqlEngine(g, maps)
+    _run_queries(engine)
+    ingest_s = 0.0
+    q_lat = []
+    n_triples = 0
+    t_all = time.perf_counter()
+    for ins, dels in batches:
+        t0 = time.perf_counter()
+        drop = set(dels)
+        current = [t for t in current if t not in drop] + ins
+        st = TripleStore()
+        st.add_many(current)
+        g, maps = type_aware_transform(st.finalize())
+        engine = SparqlEngine(g, maps)
+        ingest_s += time.perf_counter() - t0
+        n_triples += len(ins) + len(dels)
+        q_lat.append(_run_queries(engine))
+    wall = time.perf_counter() - t_all
+    return {"ingest_tps": n_triples / max(ingest_s, 1e-9),
+            "query_ms": float(np.mean(q_lat) * 1e3),
+            "wall_s": wall}
+
+
+def run(quick: bool = False) -> dict:
+    scale, density, holdout = (1, 0.3, 0.2) if quick else (2, 0.6, 0.25)
+    n_batches = 4 if quick else 8
+    base, stream, dels = _dataset(scale, density, holdout, seed=5)
+    batches = _batches(stream, dels, n_batches)
+    n_stream = sum(len(i) + len(d) for i, d in batches)
+
+    out: dict = {"scenario": {"base_triples": len(base),
+                              "stream_triples": n_stream,
+                              "batches": n_batches}}
+    for name, fn in (("delta", _delta_strategy),
+                     ("rebuild", _rebuild_strategy)):
+        res = fn(base, batches)
+        out[name] = res
+        emit(f"update.{name}.ingest", 1.0 / max(res['ingest_tps'], 1e-9),
+             f"{res['ingest_tps']:.0f} triples/s")
+        emit(f"update.{name}.query", res["query_ms"] / 1e3,
+             f"{res['query_ms']:.1f} ms mean under churn")
+        emit(f"update.{name}.wall", res["wall_s"],
+             f"{res['wall_s']:.2f} s end-to-end")
+    speedup = out["rebuild"]["wall_s"] / max(out["delta"]["wall_s"], 1e-9)
+    ingest_x = out["delta"]["ingest_tps"] / max(out["rebuild"]["ingest_tps"],
+                                                1e-9)
+    out["speedup_wall"] = round(speedup, 2)
+    out["speedup_ingest"] = round(ingest_x, 2)
+    emit("update.speedup", 0.0,
+         f"delta vs rebuild: {ingest_x:.1f}x ingest, {speedup:.2f}x wall")
+    return out
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(quick="--quick" in sys.argv)

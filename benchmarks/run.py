@@ -15,11 +15,15 @@ import time
 
 
 SUITES = ["lubm", "typeaware", "opts", "parallel", "hetero", "bsbm",
-          "kernels", "exec", "archs", "serve", "planner"]
+          "kernels", "exec", "archs", "serve", "planner", "store"]
 
-# suites whose run() return value is persisted as BENCH_<suite>.json next to
-# this file, giving future PRs a perf trajectory to compare against
-SNAPSHOT_SUITES = {"planner", "exec"}
+# suites whose module name differs from the suite name
+SUITE_MODULES = {"store": "bench_update"}
+
+# suites whose run() return value is persisted as BENCH_<name>.json next to
+# this file (named after the module), giving future PRs a perf trajectory
+# to compare against
+SNAPSHOT_SUITES = {"planner", "exec", "store"}
 
 
 def main() -> None:
@@ -32,15 +36,17 @@ def main() -> None:
     print("name,us_per_call,derived", flush=True)
     t0 = time.time()
     for suite in chosen:
-        mod = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
+        modname = SUITE_MODULES.get(suite, f"bench_{suite}")
+        mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
         t1 = time.time()
         try:
             out = mod.run(quick=args.quick)
             if suite in SNAPSHOT_SUITES and isinstance(out, dict):
                 # quick runs land in a sibling file so smoke tests never
                 # clobber the committed full-scale trajectory baseline
-                name = (f"BENCH_{suite}.quick.json" if args.quick
-                        else f"BENCH_{suite}.json")
+                base = modname.removeprefix("bench_")
+                name = (f"BENCH_{base}.quick.json" if args.quick
+                        else f"BENCH_{base}.json")
                 path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                     name)
                 with open(path, "w") as f:

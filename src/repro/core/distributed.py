@@ -78,6 +78,11 @@ def run_sharded(executor: Executor, plan: ExecPlan, mesh,
                 collect: str = "count"):
     """Execute a plan with starting chunks scattered over the mesh's data
     axes.  Single-program path: shard_map over ("data",) [+ "pod"]."""
+    if getattr(executor, "view", None) is not None:
+        # live-store snapshots re-resolve candidates per version and ship
+        # delta arrays per call; the shard_map path below bakes both, so
+        # route snapshot execution through the (correct) host loop
+        return executor.run(plan, collect="count").count
     dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     n_shards = 1
     for a in dp:

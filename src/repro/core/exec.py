@@ -83,6 +83,52 @@ class DeviceGraph:
     # per-edge-label max degree (host, for the +INT tile decision)
     max_deg_out_el: np.ndarray = field(default=None)  # type: ignore[assignment]
     max_deg_in_el: np.ndarray = field(default=None)  # type: ignore[assignment]
+    # --- live-store (snapshot) mode ---------------------------------------
+    # delta_mode=True: ``arrays`` holds only the *base* graph; the merged
+    # label bitmap / numeric column and all delta CSRs flow in per call via
+    # the step-arrays pytree, so compiled chunk programs are reused across
+    # snapshots of the same base.  ``pad_vertices`` is the pow2-padded
+    # vertex bound every per-vertex gather is sized/clipped to (stable
+    # across snapshots until the vertex count crosses the bucket);
+    # ``base_vertices``/``base_elabels`` bound the base-CSR id spaces.
+    delta_mode: bool = False
+    base_vertices: int = 0
+    base_elabels: int = 0
+    pad_vertices: int = 0
+
+    def key(self) -> tuple:
+        """Trace-relevant identity for the compiled-chunk cache.  The
+        *logical* vertex count is deliberately absent in snapshot mode —
+        traces only depend on the pow2-padded bound, so growing the vertex
+        set inside one pad bucket keeps every compiled program."""
+        return (self.delta_mode, self.pad_vertices,
+                self.base_vertices, self.n_elabels, self.max_log_deg)
+
+    @staticmethod
+    def from_snapshot(snap, with_nlf: bool = False) -> "DeviceGraph":
+        """Device view of a live-store snapshot: the base graph's arrays
+        (cached on the base, shared by successive snapshots) plus
+        snapshot-mode metadata.  Delta arrays are NOT uploaded here — they
+        are per-plan step inputs (see ``Executor._snapshot_arrays``)."""
+        import dataclasses
+
+        cache = getattr(snap.base, "_device_graph", None)
+        if cache is None or cache[0] != bool(with_nlf):
+            base_dg = DeviceGraph.from_graph(snap.base, with_nlf=with_nlf)
+            snap.base._device_graph = (bool(with_nlf), base_dg)
+        else:
+            base_dg = cache[1]
+        n_pad = _next_pow2(max(snap.n_vertices, 8))
+        return dataclasses.replace(
+            base_dg,
+            n_vertices=snap.n_vertices,
+            n_elabels=snap.n_elabels,
+            max_log_deg=32,  # safe bound: merged degrees are unbounded
+            delta_mode=True,
+            base_vertices=snap.base.n_vertices,
+            base_elabels=snap.base.n_elabels,
+            pad_vertices=n_pad,
+        )
 
     @staticmethod
     def from_graph(g: LabeledGraph, with_nlf: bool = False) -> "DeviceGraph":
@@ -126,6 +172,9 @@ class DeviceGraph:
             host=g,
             max_deg_out_el=mdo,
             max_deg_in_el=mdi,
+            base_vertices=g.n_vertices,
+            base_elabels=g.n_elabels,
+            pad_vertices=g.n_vertices,
         )
 
 
@@ -193,6 +242,7 @@ def _plan_arrays(g: LabeledGraph, plan: ExecPlan) -> list[dict[str, jax.Array]]:
         if s.restart_candidates is not None:
             cands = s.restart_candidates.astype(np.int32)
             d["restart"] = jnp.asarray(cands if cands.size else np.zeros(1, np.int32))
+            d["restart_n"] = jnp.int32(cands.size)
         elif s.elabel >= 0:
             dirn = g.out if s.forward else g.inc
             d["iptr"] = jnp.asarray(dirn.indptr_el[s.elabel], dtype=jnp.int32)
@@ -229,7 +279,7 @@ def _pad_rows(x: jax.Array, rows: int) -> jax.Array:
 
 def _nontree_mask(dg: DeviceGraph, step: Step, sarr, b_rows, p_rows, v_new,
                   opts: ExecOpts) -> jax.Array:
-    n = dg.n_vertices
+    n = dg.pad_vertices if dg.delta_mode else dg.n_vertices
     ok = jnp.ones(v_new.shape[0], dtype=bool)
     for ci, c in enumerate(step.nontree):
         use_out = c.forward or c.self_loop
@@ -237,18 +287,64 @@ def _nontree_mask(dg: DeviceGraph, step: Step, sarr, b_rows, p_rows, v_new,
         probe = v_new if c.self_loop else b_rows[:, c.other]
         psafe = jnp.clip(probe, 0, n - 1)
         if c.pvar_idx >= 0:
-            flat = sarr[f"nt{ci}_flat"]
-            el_dyn = jnp.clip(p_rows[:, c.pvar_idx], 0, dg.n_elabels - 1)
-            base = el_dyn * jnp.int32(n + 1)
-            lo = flat[base + psafe]
-            hi = flat[base + psafe + 1]
-            bound_ok = p_rows[:, c.pvar_idx] >= 0
-            found = kops.edge_exists(nbr, lo, hi, v_new, n_iters=dg.max_log_deg)
+            el_raw = p_rows[:, c.pvar_idx]
+            bound_ok = el_raw >= 0
+            if dg.delta_mode:
+                # base flat tables cover the base id spaces only; probes or
+                # labels born in the delta have no base edges by definition
+                in_base = (probe < jnp.int32(dg.base_vertices)) & \
+                    (el_raw < jnp.int32(dg.base_elabels))
+                pb = jnp.clip(probe, 0, dg.base_vertices - 1)
+                el_b = jnp.clip(el_raw, 0, dg.base_elabels - 1)
+                flat = sarr[f"nt{ci}_flat"]
+                bi = el_b * jnp.int32(dg.base_vertices + 1) + pb
+                found = kops.edge_exists(nbr, flat[bi], flat[bi + 1], v_new,
+                                         n_iters=dg.max_log_deg) & in_base
+                el_m = jnp.clip(el_raw, 0, dg.n_elabels - 1)
+                fi = el_m * jnp.int32(n + 1) + psafe
+                tf = sarr.get(f"nt{ci}_t_flat_iptr")
+                if tf is not None:
+                    dead = kops.edge_exists(
+                        sarr[f"nt{ci}_t_flat_nbr"], tf[fi], tf[fi + 1],
+                        v_new, n_iters=dg.max_log_deg)
+                    found &= ~dead
+                df = sarr.get(f"nt{ci}_d_flat_iptr")
+                if df is not None:
+                    found |= kops.edge_exists(
+                        sarr[f"nt{ci}_d_flat_nbr"], df[fi], df[fi + 1],
+                        v_new, n_iters=dg.max_log_deg)
+            else:
+                flat = sarr[f"nt{ci}_flat"]
+                el_dyn = jnp.clip(el_raw, 0, dg.n_elabels - 1)
+                base = el_dyn * jnp.int32(n + 1)
+                lo = flat[base + psafe]
+                hi = flat[base + psafe + 1]
+                found = kops.edge_exists(nbr, lo, hi, v_new,
+                                         n_iters=dg.max_log_deg)
             ok &= found & bound_ok
             continue
         iptr = sarr[f"nt{ci}_iptr"]
         lo = iptr[psafe]
         hi = iptr[psafe + 1]
+        if dg.delta_mode:
+            # base membership (padded rows: zero-degree past the base id
+            # spaces), minus tombstones, plus delta inserts — +INT tiles
+            # only cover the base CSR, so dirty labels use the search path
+            found = kops.edge_exists(nbr, lo, hi, v_new,
+                                     n_iters=dg.max_log_deg)
+            ti = sarr.get(f"nt{ci}_t_iptr")
+            if ti is not None:
+                dead = kops.edge_exists(sarr[f"nt{ci}_t_nbr"], ti[psafe],
+                                        ti[psafe + 1], v_new,
+                                        n_iters=dg.max_log_deg)
+                found &= ~dead
+            di = sarr.get(f"nt{ci}_d_iptr")
+            if di is not None:
+                found |= kops.edge_exists(sarr[f"nt{ci}_d_nbr"], di[psafe],
+                                          di[psafe + 1], v_new,
+                                          n_iters=dg.max_log_deg)
+            ok &= found
+            continue
         max_deg = int(
             (dg.max_deg_out_el if use_out else dg.max_deg_in_el)[c.elabel]
         )
@@ -312,8 +408,9 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
     steps = plan.steps
     n_steps = len(steps)
     stop = n_steps if stop_step is None else stop_step
+    dmode = dg.delta_mode
     has_numeric = "numeric_value" in dg.arrays
-    n = dg.n_vertices
+    n = dg.pad_vertices if dmode else dg.n_vertices
     for si in range(start_step, stop):
         prev = n_in if si == start_step else caps[si - 1]
         if caps[si] < prev:
@@ -342,36 +439,60 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
             active = ovf_step == jnp.int32(n_steps)
             alive = jnp.arange(cap_prev, dtype=jnp.int32) < count
 
+            # delta overlay per-step inputs (snapshot mode only; the step
+            # arrays pytree carries them so jit retraces exactly when a
+            # label's delta appears or vanishes)
+            d_iptr = sarr.get("d_iptr") if dmode else None
+            t_iptr = sarr.get("t_iptr") if dmode else None
+            start_d = deg_b = t_lo = t_hi = None
             if step.restart_candidates is not None:
-                k_cands = int(step.restart_candidates.shape[0])
-                deg = jnp.where(alive, jnp.int32(k_cands), 0)
+                k_cands = int(sarr["restart"].shape[0])
+                deg = jnp.where(alive, sarr["restart_n"], 0)
                 nbr_src = sarr["restart"]
                 start = jnp.zeros(cap_prev, dtype=jnp.int32)
                 deg_bound = k_cands
+                d_iptr = t_iptr = None
             elif step.elabel >= 0:
                 iptr = sarr["iptr"]
                 vp = jnp.clip(b[:, step.parent], 0, n - 1)
                 start = iptr[vp]
-                deg = jnp.where(alive, iptr[vp + 1] - start, 0)
+                deg_b = iptr[vp + 1] - start
+                deg = deg_b
+                if d_iptr is not None:
+                    start_d = d_iptr[vp]
+                    deg = deg + (d_iptr[vp + 1] - start_d)
+                if t_iptr is not None:
+                    t_lo, t_hi = t_iptr[vp], t_iptr[vp + 1]
+                deg = jnp.where(alive, deg, 0)
                 nbr_src = dg.arrays["out_nbr_el" if step.forward else "in_nbr_el"]
                 deg_bound = int(
                     (dg.max_deg_out_el if step.forward
-                     else dg.max_deg_in_el)[step.elabel])
+                     else dg.max_deg_in_el)[step.elabel]) \
+                    if step.elabel < dg.base_elabels else 0
             else:  # predicate variable: plain CSR
-                iptr = dg.arrays["out_indptr_all" if step.forward
-                                 else "in_indptr_all"]
+                iptr = sarr["all_iptr"] if dmode else \
+                    dg.arrays["out_indptr_all" if step.forward
+                              else "in_indptr_all"]
                 vp = jnp.clip(b[:, step.parent], 0, n - 1)
                 start = iptr[vp]
-                deg = jnp.where(alive, iptr[vp + 1] - start, 0)
+                deg_b = iptr[vp + 1] - start
+                deg = deg_b
+                if d_iptr is not None:
+                    start_d = d_iptr[vp]
+                    deg = deg + (d_iptr[vp + 1] - start_d)
+                if t_iptr is not None:
+                    t_lo, t_hi = t_iptr[vp], t_iptr[vp + 1]
+                deg = jnp.where(alive, deg, 0)
                 nbr_src = dg.arrays["out_nbr_all" if step.forward
                                     else "in_nbr_all"]
                 deg_bound = 1 << dg.max_log_deg
 
+            merged = d_iptr is not None or t_iptr is not None
             coffs = jnp.cumsum(deg.astype(jnp.int32))
             total = coffs[-1]
             offs = (coffs - deg).astype(jnp.int32)
             ovf_here = total > cap
-            if cap_prev * max(1, deg_bound) >= 2**31:
+            if dmode or cap_prev * max(1, deg_bound) >= 2**31:
                 # the int32 prefix sums can wrap; redo the *total* in a wide
                 # dtype (int64 with x64 enabled, else float32 — exact enough
                 # for a compare against cap <= 2**22) so a wrapped cumsum is
@@ -384,13 +505,15 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
             ovf_step = jnp.where(ovf_here, jnp.int32(si), ovf_step)
             count_only = collect == "count" and si == n_steps - 1
 
-            if _fused_eligible(step, opts) and not count_only:
+            bitmap_src = (sarr.get("bitmap") if dmode
+                          else dg.arrays["label_bitmap"])
+            if _fused_eligible(step, opts) and not count_only and not merged:
                 label_mask = sarr.get("label_mask")
                 if label_mask is None:
                     label_mask = jnp.zeros(
-                        (dg.arrays["label_bitmap"].shape[1],), jnp.uint32)
+                        (bitmap_src.shape[1],), jnp.uint32)
                 v_out, row_sel, kept = kops.expand_filter_compact(
-                    nbr_src, dg.arrays["label_bitmap"], start, deg, offs,
+                    nbr_src, bitmap_src, start, deg, offs,
                     label_mask, jnp.int32(step.bound_id), cap)
                 # gather-based table build: when frozen, the identity index
                 # carries the old table through at zero extra cost
@@ -405,19 +528,50 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
                 count = jnp.where(keep_new, kept, count)
             else:
                 row, j, valid = kops.ragged_expand(offs, deg, cap)
-                idx = jnp.clip(start[row] + j, 0, nbr_src.shape[0] - 1)
-                v_new = jnp.where(valid, nbr_src[idx], _NULL)
+                el_new = None
+                if merged:
+                    # live store: position j < deg_b reads the base CSR
+                    # (minus tombstones), later positions read the delta
+                    sb = start[row]
+                    db = deg_b[row]
+                    sd = start_d[row] if start_d is not None else \
+                        jnp.zeros_like(row)
+                    tl = t_lo[row] if t_lo is not None else \
+                        jnp.zeros_like(row)
+                    th = t_hi[row] if t_hi is not None else \
+                        jnp.zeros_like(row)
+                    dummy = jnp.full(1, -1, jnp.int32)
+                    d_nbr = sarr.get("d_nbr", dummy)
+                    if step.elabel >= 0:
+                        v_new, ok = kops.delta_merge(
+                            nbr_src, d_nbr, sarr.get("t_nbr", dummy),
+                            sb, db, sd, tl, th, j, valid,
+                            n_iters=dg.max_log_deg)
+                    else:
+                        lab_src = dg.arrays["out_lab_all" if step.forward
+                                            else "in_lab_all"]
+                        v_new, el_new, ok = kops.delta_merge_labeled(
+                            nbr_src, lab_src, d_nbr,
+                            sarr.get("d_lab", dummy),
+                            sarr.get("t_key", dummy),
+                            sb, db, sd, tl, th, j, valid,
+                            n_elabels=dg.n_elabels,
+                            n_iters=dg.max_log_deg)
+                else:
+                    idx = jnp.clip(start[row] + j, 0, nbr_src.shape[0] - 1)
+                    v_new = jnp.where(valid, nbr_src[idx], _NULL)
+                    ok = valid
 
                 b_rows = b[row]
                 p_rows = p[row]
                 org_rows = org[row]
                 b_rows = b_rows.at[:, step.u].set(v_new)
 
-                ok = valid
                 if step.pvar_idx >= 0:  # tree-edge M_e binding
-                    lab_src = dg.arrays["out_lab_all" if step.forward
-                                        else "in_lab_all"]
-                    el_new = jnp.where(valid, lab_src[idx], _NULL)
+                    if el_new is None:
+                        lab_src = dg.arrays["out_lab_all" if step.forward
+                                            else "in_lab_all"]
+                        el_new = jnp.where(valid, lab_src[idx], _NULL)
                     prev = p_rows[:, step.pvar_idx]
                     ok &= (prev < 0) | (prev == el_new)
                     p_rows = p_rows.at[:, step.pvar_idx].set(
@@ -425,24 +579,31 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
                 if step.bound_id >= 0:
                     ok &= v_new == jnp.int32(step.bound_id)
                 if "label_mask" in sarr:
-                    bm = dg.arrays["label_bitmap"][jnp.clip(v_new, 0, n - 1)]
+                    bm = bitmap_src[jnp.clip(v_new, 0, n - 1)]
                     ok &= kops.bitmap_superset(bm, sarr["label_mask"])
-                if step.min_out_ntypes or step.min_in_ntypes:
+                if (step.min_out_ntypes or step.min_in_ntypes) and not dmode:
+                    # degree/NLF prunes use base-build summaries; they are
+                    # not maintained across deltas, so snapshot execution
+                    # skips them (they are pure optimizations)
                     safe = jnp.clip(v_new, 0, n - 1)
                     ok &= dg.arrays["out_degree"][safe] >= jnp.int32(
                         step.min_out_ntypes)
                     ok &= dg.arrays["in_degree"][safe] >= jnp.int32(
                         step.min_in_ntypes)
-                if "nlf_out_mask" in sarr and "nlf_out" in dg.arrays:
+                if "nlf_out_mask" in sarr and "nlf_out" in dg.arrays \
+                        and not dmode:
                     safe = jnp.clip(v_new, 0, n - 1)
                     ok &= kops.bitmap_superset(dg.arrays["nlf_out"][safe],
                                                sarr["nlf_out_mask"])
                     ok &= kops.bitmap_superset(dg.arrays["nlf_in"][safe],
                                                sarr["nlf_in_mask"])
-                if step.num_filters and has_numeric:
-                    vals = dg.arrays["numeric_value"][jnp.clip(v_new, 0, n - 1)]
-                    for op, cval in step.num_filters:
-                        ok &= _jnp_cmp(vals, op, cval)
+                if step.num_filters:
+                    num_src = sarr.get("numeric") if dmode else (
+                        dg.arrays["numeric_value"] if has_numeric else None)
+                    if num_src is not None:
+                        vals = num_src[jnp.clip(v_new, 0, n - 1)]
+                        for op, cval in step.num_filters:
+                            ok &= _jnp_cmp(vals, op, cval)
                 if opts.semantics == "iso":
                     for w in plan.order:
                         if w == step.u:
@@ -537,28 +698,74 @@ def _empty_stats(n_steps: int) -> dict[str, Any]:
 
 class Executor:
     """Chunked plan executor: per-step capacity schedule, suffix-resume on
-    overflow, double-buffered async chunk dispatch, compile cache."""
+    overflow, double-buffered async chunk dispatch, compile cache.
 
-    def __init__(self, g: LabeledGraph, opts: ExecOpts | None = None):
+    ``g`` may be a plain :class:`LabeledGraph` or a live-store
+    :class:`~repro.store.versioned.Snapshot`.  In snapshot mode the base
+    graph's device arrays are shared across snapshots, delta CSRs flow in
+    per call through the step-arrays pytree (so compiled chunk programs
+    survive updates), and start / restart candidate sets are re-resolved
+    against the current snapshot — which also makes *cached plans* built
+    against an older version execute correctly."""
+
+    def __init__(self, g, opts: ExecOpts | None = None):
         self.opts = opts or ExecOpts()
-        self.graph = g
-        self.dg = DeviceGraph.from_graph(g, with_nlf=self.opts.use_nlf)
+        if getattr(g, "is_snapshot", False):
+            view = g
+            self.graph = g.base
+            dg = DeviceGraph.from_snapshot(g, with_nlf=self.opts.use_nlf)
+        else:
+            view = None
+            self.graph = g
+            dg = DeviceGraph.from_graph(g, with_nlf=self.opts.use_nlf)
+        # (view, dg) swap together atomically (single tuple assignment), so
+        # a query that pinned the pair mid-update stays internally
+        # consistent; ``view``/``dg`` attributes mirror the latest state
+        self._state: tuple[Any, DeviceGraph] = (view, dg)
         self._compiled: dict[tuple, Any] = {}
         self._plan_arrays_cache: dict[int, list[dict[str, jax.Array]]] = {}
         # learned per-plan capacity schedules (overflow doublings persist,
         # so later chunks / queries start right-sized)
         self._caps_cache: dict[tuple, list[int]] = {}
 
+    @property
+    def view(self):
+        return self._state[0]
+
+    @property
+    def dg(self) -> DeviceGraph:
+        return self._state[1]
+
+    def pin(self) -> tuple[Any, DeviceGraph]:
+        """Capture the current (view, dg) pair.  Callers composing several
+        ``run`` calls into one logical query pass it to each so concurrent
+        ``set_snapshot`` swaps cannot tear the query across versions."""
+        return self._state
+
+    def set_snapshot(self, snap) -> None:
+        """Swap to a newer snapshot of the *same* base graph (post-update).
+        Compiled chunk programs are reused: only the pytree of delta/step
+        arrays changes, and jit retraces exactly when shapes/structure do.
+        In-flight queries keep executing against the state they pinned."""
+        if self.view is None or snap.base is not self.graph:
+            raise ValueError("snapshot has a different base graph; "
+                             "build a new Executor")
+        self._state = (snap,
+                       DeviceGraph.from_snapshot(snap,
+                                                 with_nlf=self.opts.use_nlf))
+
     def _get_fn(self, plan: ExecPlan, caps: tuple[int, ...], n_in: int,
-                table_input: bool, collect: str, start: int, stop: int):
+                table_input: bool, collect: str, start: int, stop: int,
+                dg: DeviceGraph | None = None):
+        dg = self.dg if dg is None else dg
         # key on the [start, stop) capacity window only: suffix programs
         # that differ in capacities of steps they never execute are
         # byte-identical and must share one compile
         key = (plan.signature(), caps[start:stop], n_in, table_input,
-               collect, start, stop, self.opts.key())
+               collect, start, stop, self.opts.key(), dg.key())
         fn = self._compiled.get(key)
         if fn is None:
-            raw = build_chunk_fn(self.dg, plan, caps, n_in, self.opts,
+            raw = build_chunk_fn(dg, plan, caps, n_in, self.opts,
                                  table_input, collect, start, stop)
             out_cap = caps[stop - 1] if stop > start else n_in
             donate = ()
@@ -573,7 +780,11 @@ class Executor:
             self._compiled[key] = fn
         return fn
 
-    def _arrays(self, plan: ExecPlan) -> list[dict[str, jax.Array]]:
+    def _arrays(self, plan: ExecPlan,
+                state: tuple | None = None) -> list[dict[str, jax.Array]]:
+        view, dg = state if state is not None else self._state
+        if view is not None:
+            return self._snapshot_arrays(plan, view, dg)
         # cache on the plan object itself (an id()-keyed dict can collide
         # when a dead plan's id is recycled by the allocator)
         cached = getattr(plan, "_dev_arrays", None)
@@ -582,6 +793,103 @@ class Executor:
         arrs = _plan_arrays(self.graph, plan)
         plan._dev_arrays = (self.graph, arrs)  # type: ignore[attr-defined]
         return arrs
+
+    def _snapshot_arrays(self, plan: ExecPlan, snap,
+                         dg: DeviceGraph) -> list[dict[str, jax.Array]]:
+        """Per-step device constants for snapshot execution: padded base
+        CSR rows, the snapshot's delta/tombstone CSRs, merged label bitmap
+        and numeric column, and freshly resolved restart candidates."""
+        from repro.core.planner.cost import CostModel
+
+        token = snap.token()
+        cached = getattr(plan, "_dev_arrays_snap", None)
+        if cached is not None and cached[0] == token:
+            return cached[1]
+        n_pad = dg.pad_vertices
+        cm = CostModel(snap)
+        flat_cache: dict[bool, jax.Array] = {}
+
+        def base_flat(fwd: bool) -> jax.Array:
+            if fwd not in flat_cache:
+                dirn = self.graph.out if fwd else self.graph.inc
+                flat_cache[fwd] = jnp.asarray(dirn.indptr_el.reshape(-1),
+                                              dtype=jnp.int32)
+            return flat_cache[fwd]
+
+        out: list[dict[str, jax.Array]] = []
+        for s in plan.steps:
+            d: dict[str, jax.Array] = {}
+            if s.restart_candidates is not None:
+                cands = np.sort(cm.candidates(plan.query, s.u)) \
+                    .astype(np.int32)
+                n_real = cands.size
+                # pow2 padding keeps the trace stable across snapshots
+                target = _next_pow2(max(1, n_real))
+                if n_real < target:
+                    cands = np.concatenate(
+                        [cands, np.full(target - n_real, -1, np.int32)])
+                d["restart"] = jnp.asarray(cands)
+                d["restart_n"] = jnp.int32(n_real)
+            elif s.elabel >= 0:
+                d["iptr"] = snap.base_el_row_padded(s.elabel, s.forward,
+                                                    n_pad)
+                d.update(snap.dev_el_step(s.elabel, s.forward, n_pad))
+            else:
+                d["all_iptr"] = snap.base_plain_padded(s.forward, n_pad)
+                d.update(snap.dev_plain(s.forward, n_pad))
+            if s.labels:
+                d["label_mask"] = jnp.asarray(_label_mask(self.graph,
+                                                          s.labels))
+            if s.labels or _fused_eligible(s, self.opts):
+                d["bitmap"] = snap.dev_bitmap(n_pad)
+            if s.num_filters:
+                nv = snap.dev_numeric(n_pad)
+                if nv is not None:
+                    d["numeric"] = nv
+            for ci, c in enumerate(s.nontree):
+                use_out = c.forward or c.self_loop
+                if c.pvar_idx >= 0:
+                    d[f"nt{ci}_flat"] = base_flat(use_out)
+                    for k, v in snap.dev_flat(use_out, n_pad).items():
+                        d[f"nt{ci}_{k}"] = v
+                else:
+                    d[f"nt{ci}_iptr"] = snap.base_el_row_padded(
+                        c.elabel, use_out, n_pad)
+                    for k, v in snap.dev_el_step(c.elabel, use_out,
+                                                 n_pad).items():
+                        d[f"nt{ci}_{k}"] = v
+            out.append(d)
+        plan._dev_arrays_snap = (token, out)  # type: ignore[attr-defined]
+        return out
+
+    def _start_candidates(self, plan: ExecPlan,
+                          view=None) -> np.ndarray:
+        """The plan's start-candidate set, re-resolved against the current
+        snapshot when executing a live store (plans are cached across
+        versions; their baked candidate arrays go stale, the spec —
+        labels / bound id / cheap numeric filters — does not)."""
+        if view is None:
+            view = self.view
+        if view is None:
+            return plan.start_candidates
+        from repro.core.planner.cost import CostModel
+        from repro.core.planner.ir import np_cmp
+
+        token = view.token()
+        cached = getattr(plan, "_snap_start", None)
+        if cached is not None and cached[0] == token:
+            return cached[1]
+        cands = CostModel(view).candidates(plan.query, plan.start_vertex)
+        nf = getattr(plan, "start_num_filters", ())
+        if nf and view.numeric_value is not None:
+            vals = view.numeric_value[cands]
+            keep = np.ones(cands.shape[0], bool)
+            for op, c in nf:
+                keep &= np_cmp(vals, op, c)
+            cands = cands[keep]
+        cands = np.sort(cands).astype(np.int32)
+        plan._snap_start = (token, cands)  # type: ignore[attr-defined]
+        return cands
 
     def _schedule(self, plan: ExecPlan, chunk_size: int) -> tuple[tuple, list[int]]:
         """The (learned) per-step capacity schedule for this plan+chunk."""
@@ -612,11 +920,16 @@ class Executor:
         collect: str = "bindings",
         initial: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None,
         profile: bool | None = None,
+        state: tuple | None = None,
     ) -> Result:
         """Execute a plan.  ``initial=(B0, P0, origins)`` runs the plan's
         steps as an *extension* of existing rows (OPTIONAL left joins).
         ``profile=True`` (or ``ExecOpts.profile``) executes step-by-step
-        with host syncs to fill per-step wall times in ``Result.stats``."""
+        with host syncs to fill per-step wall times in ``Result.stats``.
+        ``state`` pins a ``pin()``-captured (view, device-graph) pair so a
+        multi-run query stays on one snapshot under concurrent updates."""
+        state = self.pin() if state is None else state
+        view, dg = state
         if plan.unsat:
             return Result(0, _empty(plan), _empty_p(plan), np.zeros(0, np.int32))
         opts = self.opts
@@ -625,7 +938,7 @@ class Executor:
 
         if initial is None and not plan.steps:
             # point-shaped query (paper Algorithm 1 lines 2–4)
-            cands = plan.start_candidates
+            cands = self._start_candidates(plan, view)
             b = np.full((cands.shape[0], nq), -1, dtype=np.int32)
             b[:, plan.start_vertex] = cands
             return Result(
@@ -635,13 +948,14 @@ class Executor:
                 np.arange(cands.shape[0], dtype=np.int32),
             )
 
-        sarrs = self._arrays(plan)
+        sarrs = self._arrays(plan, state)
         extension = initial is not None
         if extension:
             b0, p0, org0 = initial
             n_src = b0.shape[0]
         else:
-            n_src = plan.start_candidates.shape[0]
+            start_cands = self._start_candidates(plan, view)
+            n_src = start_cands.shape[0]
         if n_src == 0 or (not extension and not plan.steps):
             return Result(0, _empty(plan), _empty_p(plan), np.zeros(0, np.int32))
 
@@ -662,7 +976,7 @@ class Executor:
             n_real = hi - offset
             if not extension:
                 chunk = np.full(chunk_size, -1, dtype=np.int32)
-                chunk[:n_real] = plan.start_candidates[offset:hi]
+                chunk[:n_real] = start_cands[offset:hi]
                 return (jnp.asarray(chunk), jnp.int32(n_real),
                         jnp.zeros((chunk_size, npv), jnp.int32),
                         jnp.zeros((chunk_size,), jnp.int32))
@@ -679,7 +993,7 @@ class Executor:
             args = host_args(offset, hi)
             used = tuple(caps)
             fn = self._get_fn(plan, used, chunk_size, extension, collect,
-                              0, n_steps)
+                              0, n_steps, dg)
             stats["chunks"] += 1
             return {"out": fn(*args, sarrs), "args": args, "caps": used,
                     "offset": offset}
@@ -717,7 +1031,7 @@ class Executor:
                     new_caps = _grow_caps(list(used), ovf, opts.max_cap)
                     n_in = used[ovf - 1] if ovf > 0 else chunk_size
                     fn = self._get_fn(plan, tuple(new_caps), n_in, True,
-                                      collect, ovf, n_steps)
+                                      collect, ovf, n_steps, dg)
                     b, p, org, count, ovf_step, totals, kepts = fn(
                         b[:n_in], count, p[:n_in], org[:n_in], sarrs)
                     start = ovf
@@ -731,7 +1045,7 @@ class Executor:
                             f"{opts.max_cap}; raise ExecOpts.max_cap")
                     new_caps = [min(opts.max_cap, c * 2) for c in used]
                     fn = self._get_fn(plan, tuple(new_caps), chunk_size,
-                                      extension, collect, 0, n_steps)
+                                      extension, collect, 0, n_steps, dg)
                     b, p, org, count, ovf_step, totals, kepts = fn(
                         *rec["args"], sarrs)
                     start = 0
@@ -758,7 +1072,7 @@ class Executor:
             if profile and n_steps:
                 self._run_profiled_chunk(plan, sarrs, offset, hi, chunk_size,
                                          extension, collect, caps_key, stats,
-                                         host_args, drain)
+                                         host_args, drain, dg)
             else:
                 pending.append(dispatch(offset, hi))
                 if len(pending) >= max_inflight:
@@ -780,7 +1094,7 @@ class Executor:
 
     def _run_profiled_chunk(self, plan, sarrs, offset, hi, chunk_size,
                             extension, collect, caps_key, stats, host_args,
-                            drain) -> None:
+                            drain, dg: DeviceGraph | None = None) -> None:
         """Step-at-a-time execution of one chunk with host syncs, filling
         per-step wall times; overflow handling is inherently suffix-resume
         (each window re-runs alone with a doubled capacity)."""
@@ -795,7 +1109,7 @@ class Executor:
                 used = tuple(caps)
                 n_in = chunk_size if si == 0 else used[si - 1]
                 fn = self._get_fn(plan, used, n_in, extension or si > 0,
-                                  collect, si, si + 1)
+                                  collect, si, si + 1, dg)
                 t0 = time.perf_counter()
                 if si == 0:
                     out = fn(*args, sarrs)

@@ -190,7 +190,11 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
             order = None
             targets = set(comp) - {s}
             if estimate == "sampled":
-                hit = sampled_order(g, q, s, cands, optional_groups)
+                # live-store snapshots expose no raw CSR to sample from;
+                # the cost-model greedy order stands in (estimates only —
+                # snapshot answers used for candidates stay exact)
+                hit = sampled_order(g, q, s, cands, optional_groups) \
+                    if getattr(g, "supports_sampled_order", True) else None
                 if hit is not None:
                     order, sampled_fanout = hit
                 else:
@@ -230,10 +234,12 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
 
     # start-vertex cheap numeric filters applied on host
     sv = q.vertices[start_vertex]
+    start_nf: tuple = ()
     if sv.var and num_filters.get(sv.var) and g.numeric_value is not None:
+        start_nf = tuple(num_filters[sv.var])
         vals = g.numeric_value[start_candidates]
         keep = np.ones(start_candidates.shape[0], bool)
-        for op, c in num_filters[sv.var]:
+        for op, c in start_nf:
             keep &= np_cmp(vals, op, c)
         start_candidates = start_candidates[keep]
 
@@ -244,6 +250,7 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
         steps=steps,
         order=global_order,
         n_pvars=len(q.pvars),
+        start_num_filters=start_nf,
         est_fanout=est_fanout,
         est_expand=est_expand,
         est_rows=est_rows,

@@ -72,6 +72,10 @@ class ExecPlan:
     order: list[int]  # query vertex order (including start)
     n_pvars: int
     unsat: bool = False
+    # cheap numeric filters applied to the start candidates on the host —
+    # kept as a *spec* so snapshot execution (live store) can re-resolve
+    # the candidate set against a newer graph version than the plan's
+    start_num_filters: tuple = ()
     # estimated fanout per step (for capacity presizing)
     est_fanout: list[float] = field(default_factory=list)
     # raw per-step expansion factor (candidates produced per input row

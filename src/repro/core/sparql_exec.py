@@ -101,6 +101,24 @@ class CompiledQuery:
     variables: list[str]    # result columns (first branch's projection)
     kinds: list[str]
     plan_ms: float = 0.0    # total planner time (base + extension plans)
+    # solution modifiers (post-processing; part of the fingerprint)
+    distinct: bool = False
+    limit: int | None = None
+    offset: int = 0
+
+    @property
+    def has_modifiers(self) -> bool:
+        return self.distinct or self.limit is not None or self.offset > 0
+
+    @property
+    def any_unsat(self) -> bool:
+        """Some branch was compiled against a constant/predicate that did
+        not exist in the data.  On an immutable graph that verdict is
+        final; on a live store the term may be interned by a later update,
+        so unsat compilations must not enter the plan cache."""
+        return not self.branches or any(
+            br.plan.unsat or any(co.plan.unsat for co in br.optionals)
+            for br in self.branches)
 
     def estimated_rows(self) -> float:
         """Planner cardinality estimate for the full query (sum of branch
@@ -141,6 +159,22 @@ class SparqlEngine:
     def plan_cache(self):
         return self._plan_cache
 
+    def set_graph(self, g) -> None:
+        """Point the engine at a new graph state (live-store updates).
+
+        A newer :class:`~repro.store.versioned.Snapshot` of the *same* base
+        swaps into the existing executor — compiled chunk programs and the
+        plan cache survive; only the delta arrays change.  A different base
+        (post-compaction, or a plain graph) rebuilds the executor; the plan
+        cache still survives, since plans are structural and snapshot
+        execution re-resolves their candidate sets per version."""
+        self.graph = g
+        if (getattr(g, "is_snapshot", False) and self.executor.view is not None
+                and g.base is self.executor.graph):
+            self.executor.set_snapshot(g)
+        else:
+            self.executor = Executor(g, self.opts)
+
     def compile(self, source: str | SelectQuery):
         """Canonicalize + compile through the plan cache.
 
@@ -167,7 +201,12 @@ class SparqlEngine:
         fresh = compiled is None
         if fresh:
             compiled = self._compile_ast(canon.query, canon.fingerprint)
-            self._plan_cache.put(canon.fingerprint, compiled)
+            # live store: an unsat verdict is only as old as this snapshot
+            # (a later update may intern the missing term) — recompile such
+            # queries instead of caching the verdict
+            if not (getattr(self.graph, "is_snapshot", False)
+                    and compiled.any_unsat):
+                self._plan_cache.put(canon.fingerprint, compiled)
         return (compiled, fresh) if with_fresh else compiled
 
     def execute_compiled(self, compiled: CompiledQuery,
@@ -175,18 +214,31 @@ class SparqlEngine:
                          profile: bool = False) -> QueryResult:
         """Run a compiled query; result columns keep its variable names.
 
-        ``collect="count"`` lets branches without OPTIONALs or post-hoc
-        filters run the executor's count-only path (no binding-table
-        materialization or device→host transfer); the result then has an
-        exact ``count`` but empty ``rows``.  ``profile=True`` executes with
-        per-step host syncs to fill per-step wall times in the stats."""
+        ``collect="count"`` lets branches without OPTIONALs, post-hoc
+        filters or solution modifiers run the executor's count-only path
+        (no binding-table materialization or device→host transfer); the
+        result then has an exact ``count`` but empty ``rows``.  DISTINCT /
+        OFFSET / LIMIT force materialization even for counts — they are
+        applied to the assembled table here, after UNION concatenation.
+        ``profile=True`` executes with per-step host syncs to fill
+        per-step wall times in the stats."""
         all_rows: list[np.ndarray] = []
         total = 0
         exec_stats: list[dict] = []
         step_card: list[tuple[float, int]] = []
         variables, kinds = compiled.variables, compiled.kinds
+        modifiers = compiled.has_modifiers
+        # pin one executor AND its state (snapshot + device graph) for the
+        # whole query: concurrent live-store updates must not tear a UNION
+        # branch or an OPTIONAL join across data versions — and a
+        # compaction-triggered set_graph REPLACES self.executor, so the
+        # object itself must be captured too, not re-read per branch
+        executor = self.executor
+        state = executor.pin()
         for br in compiled.branches:
-            rows, count, info = self._exec_branch(br, collect, profile)
+            rows, count, info = self._exec_branch(
+                br, collect if not modifiers else "bindings", profile,
+                executor, state)
             total += count
             exec_stats.append(info)
             base = info.get("base") or {}
@@ -198,7 +250,15 @@ class SparqlEngine:
                     rows = _align_columns(rows, br.variables, variables)
                 all_rows.append(rows)
         rows = np.concatenate(all_rows) if all_rows else np.zeros((0, 0), np.int32)
-        if collect == "bindings":
+        if modifiers:
+            if compiled.distinct:
+                rows = np.unique(rows, axis=0)
+            if compiled.offset:
+                rows = rows[compiled.offset:]
+            if compiled.limit is not None:
+                rows = rows[: compiled.limit]
+            total = int(rows.shape[0])
+        elif collect == "bindings":
             total = int(rows.shape[0])
         return QueryResult(list(variables), rows, list(kinds),
                            count=total,
@@ -283,7 +343,8 @@ class SparqlEngine:
             branches=branches,
             variables=list(first.variables) if first else [],
             kinds=list(first.kinds) if first else [],
-            plan_ms=plan_ms)
+            plan_ms=plan_ms,
+            distinct=ast.distinct, limit=ast.limit, offset=ast.offset)
 
     def _compile_group(self, g: GroupPattern, select: list[str]) -> CompiledBranch:
         q = build_query_graph(g.triples, self.maps)
@@ -321,13 +382,15 @@ class SparqlEngine:
 
     # ------------------------------------------------------------ execution
     def _exec_branch(self, br: CompiledBranch, collect: str = "bindings",
-                     profile: bool = False):
+                     profile: bool = False, executor=None,
+                     state: tuple | None = None):
         """Run one branch; returns ``(rows | None, count, exec_stats)``."""
+        executor = self.executor if executor is None else executor
         count_only = (collect == "count" and not br.optionals
                       and not br.expensive)
-        res = self.executor.run(
+        res = executor.run(
             br.plan, collect="count" if count_only else "bindings",
-            profile=profile)
+            profile=profile, state=state)
         info: dict = {"base": res.stats}
         if count_only:
             return None, res.count, info
@@ -337,7 +400,8 @@ class SparqlEngine:
         opt_stats: list[dict] = []
         for co in br.optionals:
             table, ptable, ost = self._exec_left_join(table, ptable, co,
-                                                      profile)
+                                                      profile, executor,
+                                                      state)
             opt_stats.append(ost)
         if opt_stats:
             info["optionals"] = opt_stats
@@ -375,7 +439,8 @@ class SparqlEngine:
         return branches
 
     def _exec_left_join(self, table: np.ndarray, ptable: np.ndarray,
-                        co: CompiledOptional, profile: bool = False):
+                        co: CompiledOptional, profile: bool = False,
+                        executor=None, state: tuple | None = None):
         """Left-outer join a compiled OPTIONAL extension onto the table."""
         q_ext, plan, expensive = co.q_ext, co.plan, co.expensive
         nq_ext = q_ext.n_vertices
@@ -389,8 +454,9 @@ class SparqlEngine:
                              np.zeros((0, max(1, len(q_ext.pvars))), np.int32),
                              np.zeros(0, np.int32))
         else:
-            matched = self.executor.run(plan, initial=(b0, p0, org0),
-                                        profile=profile)
+            executor = self.executor if executor is None else executor
+            matched = executor.run(plan, initial=(b0, p0, org0),
+                                   profile=profile, state=state)
         mt, mp, morg = self._apply_expensive(matched.bindings,
                                              matched.pvar_bindings,
                                              q_ext, expensive,

@@ -1,0 +1,119 @@
+"""Delta-merge kernel: base/delta CSR slot resolution + tombstone masking.
+
+The live store's executor expands each binding-table row over the logical
+adjacency list ``base_slice ++ delta_slice``; this kernel resolves one
+output slot per lane — gather from the base or delta block depending on the
+within-row position — and masks base candidates that appear in the sorted
+tombstone slice via the same SIMT-style binary search as
+:mod:`repro.kernels.edge_exists` (all three adjacency arrays staged into
+VMEM as whole blocks; deltas are small by construction, and ops.py falls
+back to the jnp oracle past the VMEM bound).
+
+Oracle of record: :func:`repro.kernels.ref.delta_merge_ref`.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# combined VMEM budget for the three adjacency blocks (int32 words)
+VMEM_NBR_BOUND = 1 << 20
+
+
+def _kernel(base_ref, delta_ref, tomb_ref, bs_ref, bd_ref, ds_ref,
+            tlo_ref, thi_ref, j_ref, valid_ref, v_ref, ok_ref, *,
+            n_iters: int):
+    base = base_ref[...]
+    delta = delta_ref[...]
+    tomb = tomb_ref[...]
+    mb = base.shape[0]
+    md = delta.shape[0]
+    mt = tomb.shape[0]
+    bs = bs_ref[...]
+    bd = bd_ref[...]
+    ds = ds_ref[...]
+    j = j_ref[...]
+    valid = valid_ref[...]
+    is_base = j < bd
+    v_b = jnp.take(base, jnp.clip(bs + j, 0, mb - 1))
+    v_d = jnp.take(delta, jnp.clip(ds + (j - bd), 0, md - 1))
+    v = jnp.where(is_base, v_b, v_d)
+
+    lo0 = tlo_ref[...]
+    hi0 = thi_ref[...]
+
+    def body(_, state):
+        lo, hi = state
+        mid = (lo + hi) >> 1
+        t = jnp.take(tomb, jnp.clip(mid, 0, mt - 1))
+        right = t < v
+        return jnp.where(right, mid + 1, lo), jnp.where(right, hi, mid)
+
+    lo_f, _ = jax.lax.fori_loop(0, n_iters, body, (lo0, hi0))
+    dead = (jnp.take(tomb, jnp.clip(lo_f, 0, mt - 1)) == v) & \
+        (lo_f < hi0) & (lo0 < hi0) & is_base
+    v_ref[...] = jnp.where(valid, v, -1)
+    ok_ref[...] = valid & ~dead
+
+
+@partial(jax.jit, static_argnames=("n_iters", "interpret", "tile"))
+def delta_merge_pallas(
+    base_nbr: jax.Array,
+    delta_nbr: jax.Array,
+    tomb_nbr: jax.Array,
+    b_start: jax.Array,
+    b_deg: jax.Array,
+    d_start: jax.Array,
+    t_lo: jax.Array,
+    t_hi: jax.Array,
+    j: jax.Array,
+    valid: jax.Array,
+    *,
+    n_iters: int = 32,
+    interpret: bool = False,
+    tile: int = 1024,
+) -> tuple[jax.Array, jax.Array]:
+    from repro.kernels.ref import delta_merge_ref
+
+    total = base_nbr.shape[0] + delta_nbr.shape[0] + tomb_nbr.shape[0]
+    if total > VMEM_NBR_BOUND:
+        return delta_merge_ref(base_nbr, delta_nbr, tomb_nbr, b_start, b_deg,
+                               d_start, t_lo, t_hi, j, valid, n_iters=n_iters)
+
+    def pad1(a):  # zero-length blocks break BlockSpec; pad to one slot
+        return a if a.shape[0] else jnp.full(1, -1, jnp.int32)
+
+    base_nbr, delta_nbr, tomb_nbr = map(pad1, (base_nbr, delta_nbr, tomb_nbr))
+    (k,) = j.shape
+    t = min(tile, max(1, k))
+    pad = (-k) % t
+    if pad:
+        b_start = jnp.pad(b_start, (0, pad))
+        b_deg = jnp.pad(b_deg, (0, pad))
+        d_start = jnp.pad(d_start, (0, pad))
+        t_lo = jnp.pad(t_lo, (0, pad))
+        t_hi = jnp.pad(t_hi, (0, pad))
+        j = jnp.pad(j, (0, pad))
+        valid = jnp.pad(valid, (0, pad))  # False → slot resolves to -1
+    kp = j.shape[0]
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,))  # noqa: E731
+    lane = pl.BlockSpec((t,), lambda i: (i,))
+    v, ok = pl.pallas_call(
+        partial(_kernel, n_iters=n_iters),
+        out_shape=(jax.ShapeDtypeStruct((kp,), jnp.int32),
+                   jax.ShapeDtypeStruct((kp,), jnp.bool_)),
+        grid=(kp // t,),
+        in_specs=[full(base_nbr), full(delta_nbr), full(tomb_nbr),
+                  lane, lane, lane, lane, lane, lane, lane],
+        out_specs=(lane, lane),
+        interpret=interpret,
+    )(base_nbr.astype(jnp.int32), delta_nbr.astype(jnp.int32),
+      tomb_nbr.astype(jnp.int32), b_start.astype(jnp.int32),
+      b_deg.astype(jnp.int32), d_start.astype(jnp.int32),
+      t_lo.astype(jnp.int32), t_hi.astype(jnp.int32), j.astype(jnp.int32),
+      valid)
+    return v[:k], ok[:k]

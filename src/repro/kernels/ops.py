@@ -83,6 +83,33 @@ def ragged_expand(offsets, degrees, capacity: int):
     return _ref.ragged_expand_ref(offsets, degrees, capacity)
 
 
+def delta_merge(base_nbr, delta_nbr, tomb_nbr, b_start, b_deg, d_start,
+                t_lo, t_hi, j, valid, n_iters: int = 32):
+    """Live-store expansion: resolve merged base+delta adjacency slots and
+    mask tombstoned base edges.  See
+    :func:`repro.kernels.ref.delta_merge_ref` for semantics."""
+    if _use_pallas():
+        from repro.kernels.delta_merge import delta_merge_pallas
+
+        return delta_merge_pallas(base_nbr, delta_nbr, tomb_nbr, b_start,
+                                  b_deg, d_start, t_lo, t_hi, j, valid,
+                                  n_iters=n_iters, interpret=_interpret())
+    return _ref.delta_merge_ref(base_nbr, delta_nbr, tomb_nbr, b_start,
+                                b_deg, d_start, t_lo, t_hi, j, valid,
+                                n_iters=n_iters)
+
+
+def delta_merge_labeled(base_nbr, base_lab, delta_nbr, delta_lab, tomb_key,
+                        b_start, b_deg, d_start, t_lo, t_hi, j, valid,
+                        n_elabels: int, n_iters: int = 32):
+    """Predicate-variable variant of :func:`delta_merge` (jnp oracle on
+    every backend — the dynamic-label path is cold)."""
+    return _ref.delta_merge_labeled_ref(base_nbr, base_lab, delta_nbr,
+                                        delta_lab, tomb_key, b_start, b_deg,
+                                        d_start, t_lo, t_hi, j, valid,
+                                        n_elabels, n_iters=n_iters)
+
+
 def expand_filter_compact(nbr, bitmap, start, deg, offs, label_mask, bound_id,
                           capacity: int):
     """Fused ragged expansion + label filter + compaction (the executor's

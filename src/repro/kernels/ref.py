@@ -113,6 +113,75 @@ def expand_filter_compact_ref(
     return v_out, row_out, jnp.sum(ok.astype(jnp.int32))
 
 
+def delta_merge_ref(
+    base_nbr: jax.Array,  # int32 [mb]  base CSR adjacency values
+    delta_nbr: jax.Array,  # int32 [md] delta-insert adjacency values
+    tomb_nbr: jax.Array,  # int32 [mt]  tombstoned base neighbors (sorted runs)
+    b_start: jax.Array,  # int32 [K]   per-slot base slice start
+    b_deg: jax.Array,  # int32 [K]     per-slot base slice length
+    d_start: jax.Array,  # int32 [K]   per-slot delta slice start
+    t_lo: jax.Array,  # int32 [K]      per-slot tombstone slice start
+    t_hi: jax.Array,  # int32 [K]      per-slot tombstone slice end
+    j: jax.Array,  # int32 [K]         within-row candidate position
+    valid: jax.Array,  # bool [K]
+    n_iters: int = 32,
+) -> tuple[jax.Array, jax.Array]:
+    """Merged base+delta expansion slot resolution with tombstone masking.
+
+    Slot ``k`` resolves within-row position ``j[k]`` of a logical adjacency
+    list that is base slice ``base_nbr[b_start:b_start+b_deg)`` followed by
+    the delta slice starting at ``d_start`` — positions ``j < b_deg`` read
+    the base CSR, later positions read the delta CSR.  Base-sourced
+    candidates found in the (sorted) tombstone slice ``tomb_nbr[t_lo:t_hi)``
+    are masked out; delta candidates are never tombstoned (the store keeps
+    inserts and tombstones disjoint).  Returns ``(v, ok)``: the candidate
+    per slot (-1 when invalid) and its post-tombstone validity.
+    """
+    is_base = j < b_deg
+    mb = max(1, base_nbr.shape[0])
+    md = max(1, delta_nbr.shape[0])
+    v_b = base_nbr[jnp.clip(b_start + j, 0, mb - 1)]
+    v_d = delta_nbr[jnp.clip(d_start + (j - b_deg), 0, md - 1)]
+    v = jnp.where(is_base, v_b, v_d)
+    dead = is_base & edge_exists_ref(tomb_nbr, t_lo, t_hi, v,
+                                     n_iters=n_iters)
+    return jnp.where(valid, v, -1), valid & ~dead
+
+
+def delta_merge_labeled_ref(
+    base_nbr: jax.Array,  # int32 [mb] plain-CSR neighbors (all labels)
+    base_lab: jax.Array,  # int32 [mb] edge label aligned with base_nbr
+    delta_nbr: jax.Array,  # int32 [md]
+    delta_lab: jax.Array,  # int32 [md]
+    tomb_key: jax.Array,  # int32 [mt] sorted composite nbr*n_elabels+el runs
+    b_start: jax.Array,
+    b_deg: jax.Array,
+    d_start: jax.Array,
+    t_lo: jax.Array,
+    t_hi: jax.Array,
+    j: jax.Array,
+    valid: jax.Array,
+    n_elabels: int,
+    n_iters: int = 32,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Predicate-variable variant of :func:`delta_merge_ref`: candidates
+    carry their edge label, and tombstone probing matches the exact
+    (neighbor, label) pair via the composite key ``nbr * n_elabels + el``.
+    Returns ``(v, el, ok)``."""
+    is_base = j < b_deg
+    mb = max(1, base_nbr.shape[0])
+    md = max(1, delta_nbr.shape[0])
+    ib = jnp.clip(b_start + j, 0, mb - 1)
+    idlt = jnp.clip(d_start + (j - b_deg), 0, md - 1)
+    v = jnp.where(is_base, base_nbr[ib], delta_nbr[idlt])
+    el = jnp.where(is_base, base_lab[ib], delta_lab[idlt])
+    key = v * jnp.int32(n_elabels) + el
+    dead = is_base & edge_exists_ref(tomb_key, t_lo, t_hi, key,
+                                     n_iters=n_iters)
+    ok = valid & ~dead
+    return jnp.where(valid, v, -1), jnp.where(valid, el, -1), ok
+
+
 def ragged_expand_ref(
     offsets: jax.Array,  # int32 [R] exclusive cumsum of per-row degrees
     degrees: jax.Array,  # int32 [R]

@@ -90,7 +90,8 @@ def _build_registry(args) -> tuple[DatasetRegistry, dict[str, dict[str, str]]]:
         name = name.strip()
         t0 = time.time()
         g, maps, queries = build_dataset(name, args.scale, args.density)
-        registry.register(name, g, maps)
+        registry.register(name, g, maps,
+                          updatable=getattr(args, "updatable", False))
         workloads[name] = queries
         log.info("dataset %s built: %s in %.1fs", name, g.stats(),
                  time.time() - t0)
@@ -203,6 +204,9 @@ def main(argv=None) -> None:
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--http", action="store_true",
                     help="serve HTTP instead of running the workload")
+    ap.add_argument("--updatable", action="store_true",
+                    help="host datasets behind a VersionedStore so POST "
+                         "/update (SPARQL INSERT DATA / DELETE DATA) works")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8080)
     args = ap.parse_args(argv)

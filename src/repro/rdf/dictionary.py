@@ -20,7 +20,12 @@ RDFS_SUBCLASSOF = "rdf:subClassOf"
 
 @dataclass
 class _Interner:
-    """Append-only string interner with O(1) lookup both ways."""
+    """Append-only string interner with O(1) lookup both ways.
+
+    Append-only is a load-bearing property: the live store
+    (:mod:`repro.store`) keeps interning new terms *after* the triple
+    store is finalized, and every id handed out earlier must stay stable
+    across those insertions (and across compactions)."""
 
     to_id: dict[str, int] = field(default_factory=dict)
     to_str: list[str] = field(default_factory=list)
@@ -30,8 +35,7 @@ class _Interner:
         if tid is None:
             tid = len(self.to_str)
             self.to_id[term] = tid
-            self.to_str.append(tid and term or term)  # keep list append tight
-            self.to_str[-1] = term
+            self.to_str.append(term)
         return tid
 
     def get(self, term: str) -> int | None:

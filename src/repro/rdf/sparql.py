@@ -88,6 +88,14 @@ class SelectQuery:
     select: list[str]  # variable names, empty = '*'
     where: GroupPattern
     prefixes: dict[str, str] = field(default_factory=dict)
+    # solution modifiers (applied post-matching; ORDER BY is still ignored)
+    distinct: bool = False
+    limit: int | None = None
+    offset: int = 0
+
+    @property
+    def has_modifiers(self) -> bool:
+        return self.distinct or self.limit is not None or self.offset > 0
 
 
 # ------------------------------------------------------------------ lexer
@@ -123,6 +131,24 @@ class _Tok:
 
 class SparqlError(ValueError):
     pass
+
+
+def normalize_iri(iri: str) -> str:
+    """Canonical short forms for the well-known vocabulary.  Shared by the
+    query parser and the SPARQL UPDATE parser — both sides MUST intern the
+    same term string or updates become unfindable by queries."""
+    if iri.endswith("#type") or iri.endswith("/type"):
+        return "rdf:type"
+    if iri.endswith("#subClassOf"):
+        return "rdf:subClassOf"
+    return iri
+
+
+def normalize_prefixed(name: str) -> str:
+    if name in ("rdf:type", "rdfs:subClassOf", "rdf:subClassOf"):
+        return "rdf:type" if name == "rdf:type" else "rdf:subClassOf"
+    # datasets in this repo use prefixed names directly as dictionary terms
+    return name
 
 
 def _lex(src: str) -> list[_Tok]:
@@ -173,8 +199,9 @@ class _Parser:
             iri = self.expect("IRI").text[1:-1]
             self.prefixes[name.rstrip(":")] = iri
         self.expect("SELECT")
+        distinct = False
         if self.peek().kind == "DISTINCT":
-            log.debug("ignoring DISTINCT (paper strips result modifiers)")
+            distinct = True
             self.next()
         select: list[str] = []
         if self.peek().kind == "STAR":
@@ -184,14 +211,36 @@ class _Parser:
                 select.append(self.next().text[1:])
         self.expect("WHERE")
         where = self.group()
-        # tolerate trailing modifiers
+        # solution modifiers: LIMIT/OFFSET are honored, ORDER BY is parsed
+        # and ignored (the engine returns unordered bindings)
+        limit: int | None = None
+        offset = 0
         while self.peek().kind != "EOF":
             t = self.next()
-            if t.kind in ("ORDER", "BY", "LIMIT", "OFFSET", "ASC", "DESC", "NUMBER",
-                          "VAR", "LPAREN", "RPAREN"):
+            if t.kind in ("LIMIT", "OFFSET"):
+                n = self.expect("NUMBER")
+                try:
+                    val = int(n.text)
+                except ValueError:
+                    raise SparqlError(
+                        f"{t.kind} needs an integer, got {n.text!r} at {n.pos}"
+                    ) from None
+                if val < 0:
+                    raise SparqlError(f"{t.kind} must be >= 0 (at {n.pos})")
+                if t.kind == "LIMIT":
+                    limit = val
+                else:
+                    offset = val
+            elif t.kind == "ORDER":
+                log.debug("ignoring ORDER BY (engine returns unordered rows)")
+            elif t.kind in ("BY", "ASC", "DESC", "NUMBER", "VAR", "LPAREN",
+                            "RPAREN"):
                 continue
-            raise SparqlError(f"unexpected trailing token {t.text!r} at {t.pos}")
-        return SelectQuery(select=select, where=where, prefixes=self.prefixes)
+            else:
+                raise SparqlError(
+                    f"unexpected trailing token {t.text!r} at {t.pos}")
+        return SelectQuery(select=select, where=where, prefixes=self.prefixes,
+                           distinct=distinct, limit=limit, offset=offset)
 
     # ---- group
     def group(self) -> GroupPattern:
@@ -254,18 +303,10 @@ class _Parser:
         raise SparqlError(f"bad term {t.text!r} at {t.pos}")
 
     def _expand_iri(self, iri: str) -> str:
-        # canonical short forms for the well-known vocabulary
-        if iri.endswith("#type") or iri.endswith("/type"):
-            return "rdf:type"
-        if iri.endswith("#subClassOf"):
-            return "rdf:subClassOf"
-        return iri
+        return normalize_iri(iri)
 
     def _expand_prefixed(self, name: str) -> str:
-        if name in ("rdf:type", "rdfs:subClassOf", "rdf:subClassOf"):
-            return "rdf:type" if name == "rdf:type" else "rdf:subClassOf"
-        # datasets in this repo use prefixed names directly as dictionary terms
-        return name
+        return normalize_prefixed(name)
 
     # ---- filters
     def filter_expr(self) -> FilterExpr:

@@ -40,6 +40,7 @@ _EXPORTS = {
     "HostedDataset": "repro.serve.server",
     "SparqlHTTPServer": "repro.serve.server",
     "UnknownDataset": "repro.serve.server",
+    "UpdateNotSupported": "repro.serve.server",
     "make_server": "repro.serve.server",
     "serve_in_thread": "repro.serve.server",
 }

@@ -111,28 +111,44 @@ class PlanCache(LRUCache):
 
 class ResultCache(LRUCache):
     """(fingerprint, graph_version) -> QueryResult, with explicit
-    invalidation and a row cap so one huge result can't pin the cache."""
+    invalidation and a row cap so one huge result can't pin the cache.
+
+    ``invalidate(v)`` retires every generation ``<= v`` and raises a
+    *watermark*: later ``put`` calls for retired generations are refused.
+    Without the watermark there is a lost-invalidation race — a query that
+    captured version ``v`` before an update finishes executing after
+    ``invalidate(v)`` ran and re-inserts a stale result under a key no
+    future invalidation will ever visit."""
 
     def __init__(self, capacity: int = 512, max_result_rows: int = 200_000):
         super().__init__(capacity)
         self.max_result_rows = max_result_rows
+        self._min_version = 0  # smallest graph version still cacheable
 
     def put(self, key: Hashable, value: Any) -> None:
         rows = getattr(value, "rows", None)
         if rows is not None and rows.shape[0] > self.max_result_rows:
             return
+        if (isinstance(key, tuple) and len(key) == 2
+                and isinstance(key[1], int)):
+            with self._lock:
+                if key[1] < self._min_version:
+                    return  # a concurrent invalidation already retired it
         super().put(key, value)
 
     def invalidate(self, graph_version: int | None = None) -> int:
-        """Drop entries for one graph version (or everything)."""
+        """Drop entries up to and including ``graph_version`` (or
+        everything), and refuse late inserts for retired generations."""
         with self._lock:
             if graph_version is None:
                 n = len(self._data)
                 self._data.clear()
             else:
+                self._min_version = max(self._min_version, graph_version + 1)
                 stale = [k for k in self._data
                          if isinstance(k, tuple) and len(k) == 2
-                         and k[1] == graph_version]
+                         and isinstance(k[1], int)
+                         and k[1] <= graph_version]
                 for k in stale:
                     del self._data[k]
                 n = len(stale)

@@ -172,7 +172,17 @@ def _ser_group(g: GroupPattern) -> str:
 
 def serialize_query(ast: SelectQuery) -> str:
     sel = "*" if not ast.select else ",".join("?" + v for v in ast.select)
-    return f"SELECT({sel})WHERE{_ser_group(ast.where)}"
+    # solution modifiers are part of query identity: a cached result for
+    # LIMIT 10 must not answer LIMIT 20 (plans could be shared, results not
+    # — one fingerprint keys both caches, so modifiers split it)
+    mods = ""
+    if ast.distinct:
+        mods += "|D"
+    if ast.limit is not None:
+        mods += f"|L{ast.limit}"
+    if ast.offset:
+        mods += f"|O{ast.offset}"
+    return f"SELECT({sel})WHERE{_ser_group(ast.where)}{mods}"
 
 
 # ---------------------------------------------------------- canonical form
@@ -215,6 +225,9 @@ def canonicalize_query(ast: SelectQuery) -> CanonicalQuery:
         select=[rename.get(v, v) for v in ast.select],
         where=_canon_group(ast.where, rename),
         prefixes={},  # already folded into terms by the parser
+        distinct=ast.distinct,
+        limit=ast.limit,
+        offset=ast.offset,
     )
     text = serialize_query(canon)
     fp = hashlib.sha256(text.encode()).hexdigest()[:32]

@@ -221,6 +221,17 @@ class ServeMetrics:
         self.exec_retries = r.counter(
             "repro_exec_step_retries_total",
             "executor capacity overflows (suffix-resume re-entries)")
+        self.updates = r.counter(
+            "repro_updates_total", "SPARQL UPDATE requests by dataset/status")
+        self.update_triples = r.counter(
+            "repro_update_triples_total",
+            "triples applied via SPARQL UPDATE, by dataset and op")
+        self.update_latency = r.histogram(
+            "repro_update_latency_ms",
+            "end-to-end /update latency incl. snapshot + cache invalidation")
+        self.compactions = r.counter(
+            "repro_store_compactions_total",
+            "live-store delta compactions (base graph rebuilds)")
         self._completions: deque[float] = deque(maxlen=65536)
         self._started = time.monotonic()
         self._lock = threading.Lock()

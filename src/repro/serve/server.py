@@ -48,6 +48,10 @@ class UnknownDataset(KeyError):
     pass
 
 
+class UpdateNotSupported(ValueError):
+    """Dataset registered without ``updatable=True``."""
+
+
 @dataclass
 class HostedDataset:
     name: str
@@ -55,8 +59,12 @@ class HostedDataset:
     maps: object
     engine: SparqlEngine
     result_cache: ResultCache
+    store: object = None  # VersionedStore when updatable
     version: int = 0
     lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def current_graph(self):
+        return self.store.snapshot() if self.store is not None else self.graph
 
 
 class DatasetRegistry:
@@ -73,15 +81,26 @@ class DatasetRegistry:
     # ------------------------------------------------------------- hosting
     def register(self, name: str, graph, maps, opts: ExecOpts | None = None,
                  *, plan_cache_size: int | None = None,
-                 result_cache_size: int | None = None) -> HostedDataset:
+                 result_cache_size: int | None = None,
+                 updatable: bool = False,
+                 store=None) -> HostedDataset:
+        """Host a dataset.  ``updatable=True`` wraps the graph in a
+        :class:`~repro.store.versioned.VersionedStore` (or accepts a
+        pre-built one via ``store=``): the engine then executes against
+        live snapshots and ``POST /update`` mutates the data in place."""
         plan_cache = PlanCache(self._default_plan_cache_size
                                if plan_cache_size is None else plan_cache_size)
         result_cache = ResultCache(self._default_result_cache_size
                                    if result_cache_size is None
                                    else result_cache_size)
-        engine = SparqlEngine(graph, maps, opts, plan_cache=plan_cache)
+        if updatable and store is None:
+            from repro.store import VersionedStore
+            store = VersionedStore(graph, maps)
+        engine_graph = store.snapshot() if store is not None else graph
+        engine = SparqlEngine(engine_graph, maps, opts, plan_cache=plan_cache)
         ds = HostedDataset(name=name, graph=graph, maps=maps, engine=engine,
-                           result_cache=result_cache)
+                           result_cache=result_cache, store=store,
+                           version=store.version if store is not None else 0)
         with self._lock:
             self._datasets[name] = ds
         self.metrics.attach_cache_gauges(name, plan_cache, result_cache)
@@ -109,12 +128,59 @@ class DatasetRegistry:
 
     def invalidate(self, name: str) -> int:
         """Bump a dataset's graph version; retire its cached results.
-        Call after mutating/reloading the graph in place."""
+        Call after mutating/reloading the graph in place.  The bump and
+        the cache invalidation both happen under the dataset lock, and
+        ``ResultCache.invalidate`` raises its version watermark — so an
+        execution that captured the old version but finishes later cannot
+        re-insert a stale result (the insertion race the old code had)."""
         ds = self.get(name)
         with ds.lock:
             stale = ds.version
             ds.version += 1
-        return ds.result_cache.invalidate(stale)
+            return ds.result_cache.invalidate(stale)
+
+    def update(self, name: str, update_text: str) -> dict:
+        """Apply SPARQL UPDATE text to an updatable dataset: mutate the
+        store, swap the engine to the fresh snapshot, bump the version and
+        retire cached results — all under the dataset lock.  The plan
+        cache deliberately survives (plans are structural; snapshot
+        execution re-resolves their candidate sets)."""
+        import time as _time
+
+        ds = self.get(name)
+        if ds.store is None:
+            raise UpdateNotSupported(
+                f"dataset {name!r} is not updatable; register it with "
+                "updatable=True")
+        t0 = _time.perf_counter()
+        with ds.lock:
+            before_compactions = ds.store.counters["compactions"]
+            res = ds.store.apply_update(update_text)
+            changed = bool(res["inserted"] or res["deleted"])
+            if changed:
+                ds.engine.set_graph(ds.store.snapshot())
+                # ds.version can run ahead of the store's counter (the
+                # public invalidate() bumps it independently) — always
+                # move strictly forward so this update's invalidation
+                # cannot be skipped
+                ds.version = max(ds.version + 1, ds.store.version)
+                res["invalidated"] = ds.result_cache.invalidate(
+                    ds.version - 1)
+                res["version"] = ds.version
+            else:
+                res["invalidated"] = 0
+            compactions = ds.store.counters["compactions"] - before_compactions
+        m = self.metrics
+        m.updates.inc(dataset=name, status="ok")
+        if res["inserted"]:
+            m.update_triples.inc(res["inserted"], dataset=name, op="insert")
+        if res["deleted"]:
+            m.update_triples.inc(res["deleted"], dataset=name, op="delete")
+        if compactions:
+            m.compactions.inc(compactions)
+        m.update_latency.observe((_time.perf_counter() - t0) * 1e3)
+        res["dataset"] = name
+        return res
 
     # ----------------------------------------------------------- execution
     def execute_canonical(self, name: str, canon: CanonicalQuery,
@@ -172,13 +238,21 @@ class DatasetRegistry:
         out = {}
         for name in self.names():
             ds = self.get(name)
-            out[name] = {
-                "vertices": int(ds.graph.n_vertices),
-                "edges": int(ds.graph.n_edges),
+            g = ds.current_graph()
+            rec = {
+                "vertices": int(g.n_vertices),
+                "edges": int(g.n_edges),
                 "version": ds.version,
                 "plan_cache": ds.engine.plan_cache.snapshot(),
                 "result_cache": ds.result_cache.snapshot(),
             }
+            if ds.store is not None:
+                rec["store"] = {
+                    "delta": ds.store.delta_size(),
+                    "epoch": ds.store.epoch,
+                    **ds.store.counters,
+                }
+            out[name] = rec
         return out
 
 
@@ -239,9 +313,10 @@ class _Handler(BaseHTTPRequestHandler):
 
     def do_POST(self) -> None:  # noqa: N802
         url = urlparse(self.path)
-        if url.path != "/sparql":
+        if url.path not in ("/sparql", "/update"):
             self._error(404, f"no such endpoint: {url.path}")
             return
+        body_key = "query" if url.path == "/sparql" else "update"
         length = int(self.headers.get("Content-Length") or 0)
         raw = self.rfile.read(length) if length else b""
         ctype = (self.headers.get("Content-Type") or "").split(";")[0].strip()
@@ -256,12 +331,46 @@ class _Handler(BaseHTTPRequestHandler):
             elif ctype == "application/x-www-form-urlencoded":
                 params.update({k: v[-1]
                                for k, v in parse_qs(raw.decode()).items()})
-            elif raw.strip():  # sparql-query / text/plain / none: raw query
-                params["query"] = raw.decode()
+            elif raw.strip():  # sparql-query / -update / text/plain: raw body
+                params[body_key] = raw.decode()
         except (UnicodeDecodeError, json.JSONDecodeError) as e:
             self._error(400, f"bad request body: {e}")
             return
-        self._handle_sparql(params)
+        if (url.path == "/update" and "update" not in params and raw.strip()
+                and ctype != "application/json"):
+            # curl --data-binary defaults to form-encoding; a raw SPARQL
+            # UPDATE body form-parses to garbage keys — fall back to it
+            params["update"] = raw.decode()
+        if url.path == "/update":
+            self._handle_update(params)
+        else:
+            self._handle_sparql(params)
+
+    def _handle_update(self, params: dict) -> None:
+        from repro.store import UpdateError
+
+        update = params.get("update")
+        if not update:
+            self._error(400, "missing 'update' parameter "
+                             "(SPARQL INSERT DATA / DELETE DATA)")
+            return
+        registry = self.server.registry
+        try:
+            dataset = params.get("dataset") or registry.default_name()
+            res = registry.update(dataset, update)
+        except UnknownDataset as e:
+            self._error(404, f"unknown dataset: {e}")
+        except UpdateNotSupported as e:
+            self._error(409, str(e))
+        except UpdateError as e:
+            self.server.metrics.updates.inc(
+                dataset=params.get("dataset") or "?", status="error")
+            self._error(400, str(e))
+        except Exception as e:  # noqa: BLE001 — keep the handler alive
+            log.exception("internal error applying update")
+            self._error(500, f"internal error: {e}")
+        else:
+            self._send_json(200, res)
 
     def _handle_sparql(self, params: dict) -> None:
         query = params.get("query")

@@ -6,6 +6,6 @@ per-predicate cardinalities, per-direction fanout tables, label frequency /
 cooccurrence, and a bounded-sample join-cardinality estimator.
 """
 
-from repro.stats.graph_stats import GraphStats, get_stats
+from repro.stats.graph_stats import GraphStats, get_stats, patch_stats
 
-__all__ = ["GraphStats", "get_stats"]
+__all__ = ["GraphStats", "get_stats", "patch_stats"]

@@ -159,15 +159,20 @@ class GraphStats:
         """Bounded-sample join-cardinality estimate: mean (el, direction)
         fanout over at most ``bound`` of the given source vertices.  This is
         the planner's probe for "how many rows does expanding this edge from
-        *these* candidates produce", vs. the whole-graph average."""
+        *these* candidates produce", vs. the whole-graph average.
+
+        Sources beyond the stats' vertex space (snapshot-born vertices when
+        planning against a live store) are dropped from the sample — the
+        estimate stays an estimate, never an IndexError."""
         if sources.size == 0:
             return 0.0
-        if el < 0 or el >= self.n_elabels:
-            d = self.graph.out if forward else self.graph.inc
-            sample = sources[:bound].astype(np.int64)
-            return float(d.degree[sample].mean())
-        d = self.graph.out if forward else self.graph.inc
         sample = sources[:bound].astype(np.int64)
+        sample = sample[sample < self.graph.n_vertices]
+        if sample.size == 0:
+            return self.avg_fanout(el, forward)
+        d = self.graph.out if forward else self.graph.inc
+        if el < 0 or el >= self.n_elabels:
+            return float(d.degree[sample].mean())
         degs = d.indptr_el[el, sample + 1] - d.indptr_el[el, sample]
         return float(degs.mean())
 
@@ -184,14 +189,143 @@ class GraphStats:
         }
 
 
-def get_stats(g: LabeledGraph) -> GraphStats:
+def get_stats(g) -> GraphStats:
     """Return the graph's cached ``GraphStats``, building it on first use.
 
     The cache lives on the graph object itself, so a graph rebuilt in place
-    (new object) naturally gets fresh statistics.
+    (new object) naturally gets fresh statistics.  A live-store
+    :class:`~repro.store.versioned.Snapshot` resolves to its *base* graph's
+    stats: planner estimates tolerate the (small, bounded-by-compaction)
+    drift, and every correctness-relevant quantity — candidate sets,
+    predicate indexes — is answered exactly by the snapshot itself.
     """
+    if getattr(g, "is_snapshot", False):
+        return get_stats(g.base)
     s = getattr(g, "_graph_stats", None)
     if s is None or s.graph is not g:
         s = GraphStats.build(g)
         g._graph_stats = s  # type: ignore[attr-defined]
     return s
+
+
+# --------------------------------------------------------------------------
+# incremental maintenance (store compaction)
+# --------------------------------------------------------------------------
+
+
+def _affected_pairs(ins: np.ndarray, tombs: np.ndarray,
+                    col: int) -> tuple[np.ndarray, np.ndarray]:
+    """Distinct (el, vertex) pairs touched by the delta, with the vertex
+    taken from COO column ``col`` (0 = subjects, 2 = objects)."""
+    parts = [a[:, (1, col)] for a in (ins, tombs) if a.shape[0]]
+    if not parts:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    pairs = np.unique(np.concatenate(parts), axis=0)
+    return pairs[:, 0], pairs[:, 1]
+
+
+def _el_deg(g: LabeledGraph, els: np.ndarray, vs: np.ndarray,
+            forward: bool) -> np.ndarray:
+    d = g.out if forward else g.inc
+    deg = np.zeros(els.shape[0], dtype=np.int64)
+    ok = (els < g.n_elabels) & (vs < g.n_vertices)
+    if ok.any():
+        deg[ok] = (d.indptr_el[els[ok], vs[ok] + 1]
+                   - d.indptr_el[els[ok], vs[ok]])
+    return deg
+
+
+def patch_stats(old: GraphStats, new_g: LabeledGraph, *, ins: np.ndarray,
+                tombs: np.ndarray,
+                label_changes: list[tuple[int, tuple, tuple]]) -> GraphStats:
+    """Exact incremental ``GraphStats`` maintenance across a compaction.
+
+    ``ins`` / ``tombs`` are the folded delta as int64 COO ``[k, 3]`` arrays
+    of (src, el, dst) rows; ``label_changes`` lists ``(vertex, old_labels,
+    new_labels)`` for every vertex whose label set changed (new vertices
+    have ``old_labels == ()``).  Instead of the full O(n_elabels × V) diff
+    passes and the O(V × L²) cooccurrence rebuild of
+    :meth:`GraphStats.build`, only the touched (predicate, vertex) pairs
+    and changed label sets are visited; the result is bit-identical to a
+    from-scratch build (asserted by the store test suite).
+    """
+    old_g = old.graph
+    n_el = new_g.n_elabels
+
+    def extend(a: np.ndarray, fill=0) -> np.ndarray:
+        if a.shape[0] >= n_el:
+            return a.astype(np.int64).copy()
+        return np.concatenate(
+            [a.astype(np.int64), np.full(n_el - a.shape[0], fill, np.int64)])
+
+    pred_edges = extend(old.pred_edges)
+    if ins.shape[0]:
+        pred_edges += np.bincount(ins[:, 1], minlength=n_el)
+    if tombs.shape[0]:
+        pred_edges -= np.bincount(tombs[:, 1], minlength=n_el)
+
+    counts = {}
+    maxes = {}
+    for name, col, forward in (("pred_subjects", 0, True),
+                               ("pred_objects", 2, False)):
+        side = extend(getattr(old, name))
+        els, vs = _affected_pairs(ins, tombs, col)
+        old_deg = _el_deg(old_g, els, vs, forward)
+        new_deg = _el_deg(new_g, els, vs, forward)
+        became = ((old_deg == 0) & (new_deg > 0)).astype(np.int64)
+        died = ((old_deg > 0) & (new_deg == 0)).astype(np.int64)
+        if els.size:
+            side += np.bincount(els, weights=became,
+                                minlength=n_el).astype(np.int64)
+            side -= np.bincount(els, weights=died,
+                                minlength=n_el).astype(np.int64)
+        counts[name] = side
+        # per-el max fanout: grows to max(old, touched new degs); a delete
+        # that may have clipped the old max forces one O(V) row recompute
+        fmax = extend(getattr(old, "fanout_max_out" if forward
+                              else "fanout_max_in"))
+        if els.size:
+            for e in np.unique(els):
+                m = els == e
+                cand = int(new_deg[m].max(initial=0))
+                lowered = bool(((old_deg[m] == fmax[e])
+                                & (new_deg[m] < old_deg[m])).any())
+                if lowered:
+                    d = new_g.out if forward else new_g.inc
+                    fmax[e] = int(np.diff(d.indptr_el[e]).max(initial=0))
+                else:
+                    fmax[e] = max(int(fmax[e]), cand)
+        maxes["out" if forward else "in"] = fmax
+
+    label_freq = old.label_freq.astype(np.int64).copy()
+    label_cooc = None if old.label_cooc is None else \
+        old.label_cooc.astype(np.int64).copy()
+    for _vid, old_ls, new_ls in label_changes:
+        for ls, sign in ((old_ls, -1), (new_ls, 1)):
+            if not ls:
+                continue
+            arr = np.asarray(ls, dtype=np.int64)
+            label_freq[arr] += sign
+            if label_cooc is not None:
+                label_cooc[np.ix_(arr, arr)] += sign
+
+    with np.errstate(divide="ignore", invalid="ignore"):
+        fanout_avg_out = pred_edges / np.maximum(1, counts["pred_subjects"])
+        fanout_avg_in = pred_edges / np.maximum(1, counts["pred_objects"])
+    return GraphStats(
+        graph=new_g,
+        n_vertices=new_g.n_vertices,
+        n_edges=new_g.n_edges,
+        n_elabels=n_el,
+        n_vlabels=new_g.n_vlabels,
+        pred_edges=pred_edges,
+        pred_subjects=counts["pred_subjects"],
+        pred_objects=counts["pred_objects"],
+        fanout_avg_out=fanout_avg_out,
+        fanout_avg_in=fanout_avg_in,
+        fanout_max_out=maxes["out"],
+        fanout_max_in=maxes["in"],
+        label_freq=label_freq,
+        label_cooc=label_cooc,
+        avg_degree=float(new_g.out.degree.mean()) if new_g.n_vertices else 0.0,
+    )

@@ -234,3 +234,92 @@ def test_ragged_expand_property(degs, extra_cap):
     want = {(r, x) for r, d in enumerate(degs) for x in range(d)}
     got = {(int(row[k]), int(j[k])) for k in range(cap) if valid[k]}
     assert got == want
+
+
+# ------------------------------------------------------------- delta_merge
+def _brute_delta_merge(base, delta, tomb, bs, bd, ds, tlo, thi, j, valid):
+    v = np.full(j.shape, -1, np.int32)
+    ok = np.zeros(j.shape, bool)
+    for k in range(j.shape[0]):
+        if not valid[k]:
+            continue
+        if j[k] < bd[k]:
+            cand = base[bs[k] + j[k]]
+            dead = cand in set(tomb[tlo[k]:thi[k]])
+        else:
+            cand = delta[ds[k] + (j[k] - bd[k])]
+            dead = False
+        v[k] = cand
+        ok[k] = not dead
+    return v, ok
+
+
+def _delta_merge_case(rng, k, mb, md, mt):
+    base = np.sort(rng.integers(0, 60, size=mb)).astype(np.int32)
+    delta = np.sort(rng.integers(0, 60, size=md)).astype(np.int32)
+    # tombstones: sorted runs drawn from base values
+    tomb = np.sort(rng.choice(base, size=min(mt, mb),
+                              replace=False)).astype(np.int32)
+    bd = rng.integers(0, 5, size=k).astype(np.int32)
+    dd = rng.integers(0, 4, size=k).astype(np.int32)
+    bs = rng.integers(0, max(1, mb - 5), size=k).astype(np.int32)
+    ds = rng.integers(0, max(1, md - 4), size=k).astype(np.int32)
+    tlo = rng.integers(0, tomb.shape[0] + 1, size=k).astype(np.int32)
+    thi = np.minimum(tomb.shape[0],
+                     tlo + rng.integers(0, 4, size=k)).astype(np.int32)
+    j = rng.integers(0, 8, size=k).astype(np.int32)
+    valid = (j < bd + dd) & (rng.random(k) > 0.1)
+    return base, delta, tomb, bs, bd, ds, tlo, thi, j, valid
+
+
+@pytest.mark.parametrize("k,mb,md,mt", [(1, 8, 4, 2), (64, 200, 30, 40),
+                                        (1000, 4096, 257, 600)])
+def test_delta_merge_oracle_vs_brute(k, mb, md, mt):
+    rng = np.random.default_rng(k + mb)
+    case = _delta_merge_case(rng, k, mb, md, mt)
+    base, delta, tomb, bs, bd, ds, tlo, thi, j, valid = case
+    got_v, got_ok = ref.delta_merge_ref(
+        jnp.asarray(base), jnp.asarray(delta), jnp.asarray(tomb),
+        jnp.asarray(bs), jnp.asarray(bd), jnp.asarray(ds),
+        jnp.asarray(tlo), jnp.asarray(thi), jnp.asarray(j),
+        jnp.asarray(valid))
+    want_v, want_ok = _brute_delta_merge(base, delta, tomb, bs, bd, ds,
+                                         tlo, thi, j, valid)
+    np.testing.assert_array_equal(np.asarray(got_v), want_v)
+    np.testing.assert_array_equal(np.asarray(got_ok) & np.asarray(valid),
+                                  want_ok & valid)
+
+
+@pytest.mark.parametrize("k,mb,md,mt", [(5, 16, 8, 4), (300, 1000, 64, 128)])
+def test_delta_merge_pallas_matches_ref(k, mb, md, mt):
+    from repro.kernels.delta_merge import delta_merge_pallas
+
+    rng = np.random.default_rng(7 * k + mt)
+    case = _delta_merge_case(rng, k, mb, md, mt)
+    args = tuple(jnp.asarray(a) for a in case)
+    ref_v, ref_ok = ref.delta_merge_ref(*args)
+    got_v, got_ok = delta_merge_pallas(*args, interpret=True, tile=64)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(ref_v))
+    np.testing.assert_array_equal(np.asarray(got_ok), np.asarray(ref_ok))
+
+
+def test_delta_merge_labeled_composite_masking():
+    # base plain CSR of one source: neighbors (2, el 0), (2, el 1), (3, el 0)
+    base_nbr = jnp.asarray(np.array([2, 2, 3], np.int32))
+    base_lab = jnp.asarray(np.array([0, 1, 0], np.int32))
+    delta_nbr = jnp.asarray(np.array([9], np.int32))
+    delta_lab = jnp.asarray(np.array([1], np.int32))
+    n_el = 2
+    # tombstone exactly (nbr=2, el=1) -> key 5
+    tomb_key = jnp.asarray(np.array([5], np.int32))
+    k = 4
+    z = lambda v: jnp.asarray(np.full(k, v, np.int32))  # noqa: E731
+    j = jnp.asarray(np.arange(k, dtype=np.int32))
+    v, el, ok = ref.delta_merge_labeled_ref(
+        base_nbr, base_lab, delta_nbr, delta_lab, tomb_key,
+        z(0), z(3), z(0), z(0), z(1), j,
+        jnp.asarray(np.ones(k, bool)), n_el)
+    np.testing.assert_array_equal(np.asarray(v), [2, 2, 3, 9])
+    np.testing.assert_array_equal(np.asarray(el), [0, 1, 0, 1])
+    # only the (2, el=1) candidate is tombstoned; delta slot never is
+    np.testing.assert_array_equal(np.asarray(ok), [True, False, True, True])

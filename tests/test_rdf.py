@@ -173,6 +173,59 @@ def test_bitmap_pack():
     assert bm[1, 0] == np.uint32(1 << 31)
 
 
+# ------------------------------------------------------- dictionary growth
+def test_dictionary_growth_after_finalize():
+    """The live store keeps interning after finalize(): existing ids must
+    stay stable and new ids must round-trip."""
+    st_ = TripleStore()
+    st_.add("a:s", "a:p", '"1"')
+    st_.add("a:s", "a:q", "a:o")
+    st_.finalize()
+    d = st_.dict
+    before = {t: d.term_id(t) for t in ("a:s", "a:o", '"1"')}
+    before_p = {p: d.predicate_id(p) for p in ("a:p", "a:q")}
+    n_terms, n_preds = d.n_terms, d.n_predicates
+    new_t = d.encode_term("a:later")
+    new_lit = d.encode_term('"lit after finalize"')
+    new_p = d.encode_predicate("a:newPred")
+    assert new_t == n_terms and new_p == n_preds
+    assert d.term(new_t) == "a:later"
+    assert d.term(new_lit) == '"lit after finalize"'
+    assert new_lit in d.literal_ids
+    assert d.predicate(new_p) == "a:newPred"
+    # pre-existing ids unchanged
+    assert {t: d.term_id(t) for t in before} == before
+    assert {p: d.predicate_id(p) for p in before_p} == before_p
+    # re-interning is idempotent
+    assert d.encode_term("a:later") == new_t
+    assert d.encode_predicate("a:newPred") == new_p
+
+
+@given(st.lists(st.text(alphabet="abcXYZ0:_\"", min_size=1, max_size=8),
+                min_size=1, max_size=40),
+       st.integers(1, 20))
+@settings(max_examples=50, deadline=None)
+def test_dictionary_growth_property(terms, split):
+    """Interning any term stream in two phases (pre/post finalize-style
+    cutover) yields stable ids and perfect round-trips."""
+    d = Dictionary()
+    ids_first = [d.encode_term(t) for t in terms[:split]]
+    frozen = {t: d.term_id(t) for t in terms[:split]}
+    ids_second = [d.encode_term(t) for t in terms[split:]]
+    # phase 1 ids survived phase 2 interning
+    assert [d.term_id(t) for t in terms[:split]] == ids_first
+    assert {t: d.term_id(t) for t in terms[:split]} == frozen
+    # every id round-trips to its term, vlabels/preds spaces untouched
+    for t, tid in zip(terms, ids_first + ids_second):
+        assert d.term(tid) == t
+        assert d.term_id(t) == d.encode_term(t)
+    assert d.n_terms == len(set(terms))
+    # literal tracking is consistent with the quote convention
+    for t in terms:
+        if t.startswith('"'):
+            assert d.term_id(t) in d.literal_ids
+
+
 @given(st.integers(2, 25), st.integers(1, 60), st.integers(1, 4),
        st.integers(0, 2**31 - 1))
 @settings(max_examples=25, deadline=None)

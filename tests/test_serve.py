@@ -479,3 +479,180 @@ def test_http_error_codes(http_service):
     with pytest.raises(urllib.error.HTTPError) as ei:
         urllib.request.urlopen(f"http://{host}:{port}/bogus", timeout=30)
     assert ei.value.code == 404
+
+
+# ------------------------------------------- live updates / result versions
+def test_result_cache_watermark_blocks_late_stale_put():
+    """Regression: a query that captured version v, finished after
+    invalidate(v), used to re-insert its stale result under (fp, v) — a key
+    no later invalidation visits.  The watermark refuses the late put."""
+    rc = ResultCache(capacity=8)
+    r = QueryResult(["x"], np.zeros((1, 1), np.int32), ["vertex"], count=1)
+    assert rc.invalidate(0) == 0
+    rc.put(("fp", 0), r)          # late insert for a retired generation
+    assert rc.peek(("fp", 0)) is None
+    rc.put(("fp", 1), r)          # current generation still caches
+    assert rc.peek(("fp", 1)) is r
+    # invalidate retires every generation <= v, not just == v
+    rc.put(("fp2", 1), r)
+    assert rc.invalidate(2) == 2
+    assert rc.peek(("fp", 1)) is None and rc.peek(("fp2", 1)) is None
+
+
+def test_registry_update_bumps_version_under_lock(lubm_graph):
+    g, maps = lubm_graph
+    registry = DatasetRegistry(result_cache_size=16)
+    registry.register("live", g, maps, updatable=True)
+    q = "SELECT ?x WHERE { ?x rdf:type ub:FullProfessor . }"
+    c0 = registry.execute("live", q).count
+    ds = registry.get("live")
+    assert ds.result_cache.peek((fingerprint_query(q), 0)) is not None
+    out = registry.update("live", """INSERT DATA {
+        ub:NewProf rdf:type ub:FullProfessor . }""")
+    assert out["inserted"] == 1 and out["version"] == ds.version >= 1
+    assert out["invalidated"] >= 1
+    # stale generation is gone; fresh execution sees the new data
+    assert ds.result_cache.peek((fingerprint_query(q), 0)) is None
+    assert registry.execute("live", q).count == c0 + 1
+    # plan cache survived the update
+    assert ds.engine.plan_cache.stats.misses >= 1
+    assert len(ds.engine.plan_cache) >= 1
+    with pytest.raises(ValueError):  # not updatable
+        registry.register("frozen", g, maps)
+        registry.update("frozen", "INSERT DATA { ub:a ub:p ub:b . }")
+
+
+def test_registry_update_invalidates_after_manual_invalidate(lubm_graph):
+    """Regression: a manual invalidate() bumps ds.version ahead of the
+    store's counter; the next update must still move the version forward
+    and retire cached results (it used to no-op the invalidation)."""
+    g, maps = lubm_graph
+    registry = DatasetRegistry(result_cache_size=16)
+    registry.register("live2", g, maps, updatable=True)
+    q = "SELECT ?x WHERE { ?x rdf:type ub:AssistantProfessor . }"
+    registry.invalidate("live2")                    # ds.version -> 1
+    c0 = registry.execute("live2", q).count
+    ds = registry.get("live2")
+    v1 = ds.version
+    assert ds.result_cache.peek((fingerprint_query(q), v1)) is not None
+    out = registry.update("live2", """INSERT DATA {
+        ub:NewAsst rdf:type ub:AssistantProfessor . }""")
+    assert out["version"] == ds.version > v1
+    assert ds.result_cache.peek((fingerprint_query(q), v1)) is None
+    assert registry.execute("live2", q).count == c0 + 1
+
+
+# ------------------------------------------------------------- /update e2e
+@pytest.fixture()
+def updatable_service(lubm_graph):
+    g, maps = lubm_graph
+    registry = DatasetRegistry(ServeMetrics(), result_cache_size=16)
+    registry.register("lubm", g, maps, updatable=True)
+    server = make_server(registry, port=0, workers=2, default_timeout_s=60.0)
+    serve_in_thread(server)
+    yield server
+    server.shutdown()
+    server.scheduler.stop()
+
+
+def _http_post(server, path, body, ctype="application/sparql-update"):
+    host, port = server.server_address[:2]
+    req = urllib.request.Request(f"http://{host}:{port}{path}",
+                                 data=body.encode(),
+                                 headers={"Content-Type": ctype})
+    with urllib.request.urlopen(req, timeout=60) as r:
+        return json.loads(r.read())
+
+
+def test_http_update_endpoint(updatable_service):
+    server = updatable_service
+    q = ("SELECT ?x WHERE { ?x rdf:type ub:GraduateStudent . "
+         "?x ub:takesCourse ub:HttpCourse . }")
+    out0 = _http_get(server, q)
+    assert out0["stats"]["count"] == 0
+    res = _http_post(server, "/update", """INSERT DATA {
+        ub:HttpStudent rdf:type ub:GraduateStudent .
+        ub:HttpStudent ub:takesCourse ub:HttpCourse . }""")
+    assert res["inserted"] == 2 and res["version"] >= 1
+    out1 = _http_get(server, q)
+    assert out1["stats"]["count"] == 1
+    assert out1["results"]["bindings"][0]["x"]["value"] == "ub:HttpStudent"
+    # JSON body form + delete
+    res2 = _http_post(
+        server, "/update",
+        json.dumps({"update": "DELETE DATA { ub:HttpStudent "
+                              "ub:takesCourse ub:HttpCourse . }"}),
+        ctype="application/json")
+    assert res2["deleted"] == 1
+    assert _http_get(server, q)["stats"]["count"] == 0
+    # health reflects the live store
+    host, port = server.server_address[:2]
+    with urllib.request.urlopen(f"http://{host}:{port}/healthz",
+                                timeout=30) as r:
+        health = json.loads(r.read())
+    assert health["datasets"]["lubm"]["store"]["inserted"] >= 2
+    with urllib.request.urlopen(f"http://{host}:{port}/metrics",
+                                timeout=30) as r:
+        text = r.read().decode()
+    assert "repro_updates_total" in text
+    assert 'repro_update_triples_total{dataset="lubm",op="insert"} 2' in text
+
+
+def test_http_update_accepts_default_curl_content_type(updatable_service):
+    # `curl --data-binary` sends x-www-form-urlencoded by default; a raw
+    # SPARQL UPDATE body must still be accepted (README documents it)
+    server = updatable_service
+    res = _http_post(server, "/update",
+                     "INSERT DATA { ub:CurlS ub:advisor ub:CurlO . }",
+                     ctype="application/x-www-form-urlencoded")
+    assert res["inserted"] == 1
+    q = "SELECT ?x WHERE { ub:CurlS ub:advisor ?x . }"
+    assert _http_get(server, q)["stats"]["count"] == 1
+
+
+def test_http_update_errors(updatable_service):
+    server = updatable_service
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _http_post(server, "/update", "DELETE WHERE { ?s ?p ?o }")
+    assert ei.value.code == 400
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _http_post(server, "/update", "")
+    assert ei.value.code == 400
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        _http_post(server, "/update?dataset=nope",
+                   "INSERT DATA { ub:a ub:p ub:b . }")
+    assert ei.value.code == 404
+
+
+def test_concurrent_queries_during_updates(updatable_service):
+    """Queries racing a writer must always see a consistent snapshot —
+    never crash, never a half-applied batch."""
+    server = updatable_service
+    q = ("SELECT ?x WHERE { ?x rdf:type ub:GraduateStudent . "
+         "?x ub:takesCourse ub:RaceCourse . }")
+    errors, counts = [], []
+    stop = threading.Event()
+
+    def reader():
+        try:
+            while not stop.is_set():
+                counts.append(_http_get(server, q)["stats"]["count"])
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    readers = [threading.Thread(target=reader) for _ in range(3)]
+    for t in readers:
+        t.start()
+    try:
+        for i in range(8):
+            _http_post(server, "/update", f"""INSERT DATA {{
+                ub:Racer{i} rdf:type ub:GraduateStudent .
+                ub:Racer{i} ub:takesCourse ub:RaceCourse . }}""")
+    finally:
+        stop.set()
+        for t in readers:
+            t.join(timeout=30.0)
+    assert not errors
+    assert _http_get(server, q)["stats"]["count"] == 8
+    # every observed count is a whole batch (type+edge land atomically)
+    assert set(counts) <= set(range(9))

@@ -292,3 +292,74 @@ def test_direct_with_inference_matches_type_aware():
     e_d = SparqlEngine(g_d, m_d)
     for name in ("Q2", "Q5", "Q6", "Q9", "Q13", "Q14"):
         assert e_t.count(LUBM_QUERIES[name]) == e_d.count(LUBM_QUERIES[name]), name
+
+
+# --------------------------------------------------------------------------
+# solution modifiers: DISTINCT / LIMIT / OFFSET
+# --------------------------------------------------------------------------
+
+
+def test_parse_modifiers():
+    q = parse_sparql("SELECT DISTINCT ?x WHERE { ?x rdf:type ub:Student . } "
+                     "LIMIT 7 OFFSET 3")
+    assert q.distinct and q.limit == 7 and q.offset == 3
+    assert q.has_modifiers
+    q2 = parse_sparql("SELECT ?x WHERE { ?x rdf:type ub:Student . }")
+    assert not q2.has_modifiers and q2.limit is None and q2.offset == 0
+    with pytest.raises(SparqlError):
+        parse_sparql("SELECT ?x WHERE { ?x a ub:S . } LIMIT ?x")
+
+
+def test_limit_offset_applied(lubm_graph):
+    g, maps = lubm_graph
+    engine = SparqlEngine(g, maps)
+    base = "SELECT ?x ?y WHERE { ?x ub:advisor ?y . }"
+    full = engine.query(base)
+    assert full.count > 3
+    lim = engine.query(base + " LIMIT 3")
+    assert lim.count == 3 and lim.rows.shape[0] == 3
+    off = engine.query(base + f" OFFSET {full.count - 1}")
+    assert off.count == 1
+    past = engine.query(base + f" OFFSET {full.count + 5}")
+    assert past.count == 0
+    both = engine.query(base + " LIMIT 2 OFFSET 1")
+    assert both.count == 2
+    # count collection honors the modifiers (must materialize internally)
+    assert engine.count(base + " LIMIT 3") == 3
+    assert engine.count(base) == full.count
+
+
+def test_distinct_dedupes(lubm_graph):
+    g, maps = lubm_graph
+    engine = SparqlEngine(g, maps)
+    proj = "SELECT ?x WHERE { ?x ub:advisor ?y . }"
+    full = engine.query(proj)
+    dis = engine.query(proj.replace("SELECT ?x", "SELECT DISTINCT ?x"))
+    uniq = np.unique(full.rows, axis=0)
+    assert dis.count == uniq.shape[0] <= full.count
+    np.testing.assert_array_equal(np.sort(dis.rows, axis=0),
+                                  np.sort(uniq, axis=0))
+
+
+def test_count_bypass_without_modifiers(lubm_graph):
+    """collect='count' with no modifier present must keep the executor's
+    no-materialization fast path (rows stay empty)."""
+    g, maps = lubm_graph
+    engine = SparqlEngine(g, maps)
+    q = "SELECT ?x ?y WHERE { ?x ub:advisor ?y . }"
+    res = engine.query(q, collect="count")
+    assert res.count > 0 and res.rows.shape[0] == 0
+    # with a modifier the same call materializes to get the answer right
+    res_lim = engine.query(q + " LIMIT 1", collect="count")
+    assert res_lim.count == 1
+
+
+def test_modifiers_split_fingerprints(lubm_graph):
+    from repro.serve.fingerprint import fingerprint_query
+
+    q = "SELECT ?x WHERE { ?x rdf:type ub:Student . }"
+    fps = {fingerprint_query(q), fingerprint_query(q + " LIMIT 5"),
+           fingerprint_query(q + " LIMIT 6"),
+           fingerprint_query(q + " OFFSET 5"),
+           fingerprint_query(q.replace("SELECT", "SELECT DISTINCT"))}
+    assert len(fps) == 5

@@ -1,0 +1,328 @@
+"""Live-store subsystem tests: SPARQL UPDATE parsing, delta buffer
+semantics, snapshot host interface, the core equivalence property
+(snapshot == from-scratch rebuild, pre- and post-compaction, on LUBM and
+BSBM query shapes), incremental GraphStats maintenance, and serving-layer
+update integration."""
+
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+
+from repro.core import SparqlEngine
+from repro.rdf.generator import generate_bsbm, generate_lubm
+from repro.rdf.graph import LabeledGraph
+from repro.rdf.transform import type_aware_transform
+from repro.rdf.triples import TripleStore
+from repro.rdf.workloads import BSBM_QUERIES, LUBM_QUERIES
+from repro.stats import GraphStats, get_stats
+from repro.store import (EdgeDelta, UpdateError, VersionedStore, parse_update)
+from repro.store.delta import DeltaCOO, base_has_edge
+
+
+# ---------------------------------------------------------- update parser
+def test_parse_update_insert_delete():
+    ops = parse_update("""
+        PREFIX ub: <http://example.org/univ#>
+        INSERT DATA { ub:s1 ub:knows ub:s2 . ub:s1 a ub:Student }
+        DELETE DATA { ub:s1 ub:age "25" . }
+    """)
+    assert [op.action for op in ops] == ["insert", "delete"]
+    assert ops[0].triples == [("ub:s1", "ub:knows", "ub:s2"),
+                              ("ub:s1", "rdf:type", "ub:Student")]
+    assert ops[1].triples == [("ub:s1", "ub:age", '"25"')]
+
+
+def test_parse_update_iri_normalization_and_numbers():
+    ops = parse_update("""INSERT DATA {
+        <http://a> <http://www.w3.org/1999/02/22-rdf-syntax-ns#type> <http://C> .
+        <http://a> <http://p> 42 . }""")
+    assert ops[0].triples[0] == ("http://a", "rdf:type", "http://C")
+    assert ops[0].triples[1] == ("http://a", "http://p", '"42"')
+
+
+def test_parse_update_rejects_bad_input():
+    with pytest.raises(UpdateError):
+        parse_update("SELECT ?x WHERE { ?x ?p ?o }")
+    with pytest.raises(UpdateError):
+        parse_update("INSERT DATA { ?x ub:p ub:o }")  # variables are not data
+    with pytest.raises(UpdateError):
+        parse_update("INSERT { ub:a ub:p ub:o }")  # only INSERT DATA
+    with pytest.raises(UpdateError):
+        parse_update("")
+
+
+# ----------------------------------------------------------- delta buffer
+def _tiny_graph():
+    # 0 --0--> 1, 0 --0--> 2, 1 --1--> 2
+    return LabeledGraph.build(
+        3, np.array([0, 0, 1]), np.array([0, 0, 1]), np.array([1, 2, 2]),
+        2, [(0,), (), (1,)], 2)
+
+
+def test_edge_delta_state_machine():
+    g = _tiny_graph()
+    d = EdgeDelta(g)
+    assert base_has_edge(g, 0, 0, 1) and not base_has_edge(g, 0, 1, 1)
+    assert not d.insert(0, 0, 1)          # already in base: no-op
+    assert d.insert(2, 0, 0)              # genuinely new
+    assert not d.insert(2, 0, 0)          # duplicate insert: no-op
+    assert d.delete(2, 0, 0)              # delete of an insert: un-inserts
+    assert not d.inserts and not d.tombs
+    assert d.delete(0, 0, 1)              # base edge: tombstone
+    assert not d.delete(0, 0, 1)          # already tombstoned
+    assert d.insert(0, 0, 1)              # re-insert removes the tombstone
+    assert not d.inserts and not d.tombs
+    assert not d.delete(1, 0, 2)          # never existed (wrong label)
+
+
+def test_delta_coo_rows_sorted():
+    edges = {(2, 0, 1), (0, 0, 5), (0, 0, 2), (1, 1, 0)}
+    coo = DeltaCOO.from_edges(edges, forward=True)
+    iptr, nbr = coo.el_rows(0, 8)
+    assert list(iptr[:4]) == [0, 2, 2, 3]
+    assert list(nbr) == [2, 5, 1]  # per-source runs ascending
+    assert coo.max_run() == 2
+    iptr1, nbr1 = coo.el_rows(1, 8)
+    assert list(nbr1) == [0]
+
+
+# ------------------------------------------------- snapshot host interface
+def test_snapshot_predicate_index_and_candidates():
+    g = _tiny_graph()
+    store = VersionedStore(g, auto_compact=False)
+    v3 = store.add_vertex(labels=(0,))
+    store.insert_edges([(v3, 0, 1), (2, 0, 0)])
+    store.delete_edges([(0, 0, 1), (0, 0, 2)])  # vertex 0 loses all el-0 out
+    snap = store.snapshot()
+    subs, objs = snap.predicate_index(0)
+    assert list(subs) == [2, 3]           # 0 dropped, 2 and 3 added
+    assert list(objs) == [0, 1]           # 2 dropped (both its in-edges died)
+    assert list(snap.candidates_with_labels([0])) == [0, 3]
+    assert snap.freq([0]) == 2
+    assert snap.out.degree[0] == 0 and snap.out.degree[3] == 1
+    assert snap.n_edges == g.n_edges  # -2 +2
+
+
+def test_snapshot_new_elabel():
+    g = _tiny_graph()
+    store = VersionedStore(g, auto_compact=False)
+    store.insert_edges([(0, 5, 1)])  # label space grows to 6
+    snap = store.snapshot()
+    assert snap.n_elabels == 6
+    subs, objs = snap.predicate_index(5)
+    assert list(subs) == [0] and list(objs) == [1]
+
+
+# ----------------------------------------------------- equivalence property
+def _split_stream(triples, rng, frac_base=0.75, n_dels=40):
+    onto = [t for t in triples if t[1] in ("rdf:type", "rdf:subClassOf")]
+    plain = [t for t in triples if t[1] not in ("rdf:type", "rdf:subClassOf")]
+    idx = rng.permutation(len(plain))
+    n_base = int(len(plain) * frac_base)
+    base = onto + [plain[i] for i in idx[:n_base]]
+    ins = [plain[i] for i in idx[n_base:]]
+    dels = [plain[idx[i]] for i in
+            rng.choice(n_base, size=min(n_dels, n_base), replace=False)]
+    return base, ins, dels
+
+
+def _decoded(res, maps):
+    return sorted(tuple(sorted((k, v or "") for k, v in r.items()))
+                  for r in res.decode(maps))
+
+
+def _check_equivalence(base, ins, dels, queries, compact):
+    st_ = TripleStore()
+    st_.add_many(base)
+    g, maps = type_aware_transform(st_.finalize())
+    store = VersionedStore(g, maps, auto_compact=False)
+    get_stats(g)  # force base stats so compaction exercises patch_stats
+    store.insert_triples(ins)
+    store.delete_triples(dels)
+    snap = store.compact() if compact else store.snapshot()
+    eng = SparqlEngine(snap, maps)
+
+    final = [t for t in base if t not in set(dels)] + ins
+    st2 = TripleStore()
+    st2.add_many(final)
+    g2, maps2 = type_aware_transform(st2.finalize())
+    ref = SparqlEngine(g2, maps2)
+    for name, q in queries.items():
+        r1, r2 = eng.query(q), ref.query(q)
+        assert r1.count == r2.count, (name, r1.count, r2.count)
+        assert _decoded(r1, maps) == _decoded(r2, maps2), name
+        assert eng.count(q) == r2.count, name  # count path agrees too
+    if compact:
+        patched = snap.base._graph_stats
+        built = GraphStats.build(snap.base)
+        for f in ("pred_edges", "pred_subjects", "pred_objects",
+                  "fanout_max_out", "fanout_max_in", "label_freq"):
+            np.testing.assert_array_equal(getattr(patched, f),
+                                          getattr(built, f), err_msg=f)
+        np.testing.assert_allclose(patched.fanout_avg_out,
+                                   built.fanout_avg_out)
+        np.testing.assert_allclose(patched.fanout_avg_in,
+                                   built.fanout_avg_in)
+        if built.label_cooc is not None:
+            np.testing.assert_array_equal(patched.label_cooc,
+                                          built.label_cooc)
+        assert (patched.n_edges, patched.n_vertices) == \
+            (built.n_edges, built.n_vertices)
+
+
+@pytest.mark.parametrize("seed,compact", [(1, False), (1, True), (7, False)])
+def test_lubm_stream_equivalence(seed, compact):
+    """Acceptance property: querying base+delta (and the compacted graph)
+    is indistinguishable from rebuilding from the merged triple set."""
+    full = generate_lubm(scale=1, seed=0, density=0.35).finalize()
+    rng = np.random.default_rng(seed)
+    base, ins, dels = _split_stream(list(full.iter_decoded()), rng)
+    _check_equivalence(base, ins, dels, LUBM_QUERIES, compact)
+
+
+@pytest.mark.parametrize("compact", [False, True])
+def test_bsbm_stream_equivalence(compact):
+    """Same property over BSBM shapes (FILTER / OPTIONAL / UNION)."""
+    full = generate_bsbm(n_products=120, seed=3).finalize()
+    rng = np.random.default_rng(11)
+    base, ins, dels = _split_stream(list(full.iter_decoded()), rng,
+                                    frac_base=0.8, n_dels=30)
+    _check_equivalence(base, ins, dels, BSBM_QUERIES, compact)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=3, deadline=None)
+def test_random_stream_equivalence_property(seed):
+    full = generate_lubm(scale=1, seed=0, density=0.25).finalize()
+    rng = np.random.default_rng(seed)
+    base, ins, dels = _split_stream(list(full.iter_decoded()), rng,
+                                    frac_base=float(rng.uniform(0.6, 0.9)),
+                                    n_dels=int(rng.integers(0, 60)))
+    queries = {k: LUBM_QUERIES[k] for k in ("Q1", "Q2", "Q6", "Q9", "Q14")}
+    _check_equivalence(base, ins, dels, queries,
+                       compact=bool(rng.integers(0, 2)))
+
+
+# ----------------------------------------------------- store/update layers
+def test_update_visibility_and_plan_cache_survival(lubm_graph):
+    g, maps = lubm_graph
+    store = VersionedStore(g, maps, auto_compact=False)
+    eng = SparqlEngine(store.snapshot(), maps)
+    q = ("SELECT ?x WHERE { ?x rdf:type ub:GraduateStudent . "
+         "?x ub:takesCourse ?c . }")
+    c0 = eng.query(q).count
+    store.apply_update("""INSERT DATA {
+        ub:Zed rdf:type ub:GraduateStudent .
+        ub:Zed ub:takesCourse ub:CourseZ . }""")
+    eng.set_graph(store.snapshot())
+    assert eng.query(q).count == c0 + 1
+    # same compiled plan object served both versions
+    assert eng.plan_cache.stats.misses == 1 and eng.plan_cache.stats.hits >= 1
+    # decode sees the interned terms
+    res = eng.query("SELECT ?c WHERE { ub:Zed ub:takesCourse ?c . }")
+    assert [r["c"] for r in res.decode(maps)] == ["ub:CourseZ"]
+    store.apply_update("DELETE DATA { ub:Zed ub:takesCourse ub:CourseZ . }")
+    eng.set_graph(store.snapshot())
+    assert eng.query(q).count == c0
+
+
+def test_type_insert_grows_labels_and_retraction_rejected(lubm_graph):
+    g, maps = lubm_graph
+    store = VersionedStore(g, maps, auto_compact=False)
+    # GraduateStudent is a subclass of Student in the generator's ontology:
+    # closure labels must appear on an existing, previously unlabeled vertex
+    eng = SparqlEngine(store.snapshot(), maps)
+    q_student = "SELECT ?x WHERE { ?x rdf:type ub:Student . }"
+    c0 = eng.count(q_student)
+    store.insert_triples([("ub:Brand-New", "rdf:type", "ub:GraduateStudent")])
+    eng.set_graph(store.snapshot())
+    assert eng.count(q_student) == c0 + 1
+    with pytest.raises(UpdateError):
+        store.delete_triples([("ub:Brand-New", "rdf:type",
+                               "ub:GraduateStudent")])
+    with pytest.raises(UpdateError):
+        store.insert_triples([("ub:X", "rdf:type", "ub:NoSuchClass")])
+
+
+def test_failed_batch_applies_nothing(lubm_graph):
+    """Regression: a rejected batch/update must not leave a half-applied
+    prefix in the delta (it would leak into the next successful update)."""
+    g, maps = lubm_graph
+    store = VersionedStore(g, maps, auto_compact=False)
+    v0, d0 = store.version, store.delta_size()
+    with pytest.raises(UpdateError):
+        store.insert_triples([
+            ("ub:LeakS", "ub:advisor", "ub:LeakO"),          # valid
+            ("ub:LeakS", "rdf:type", "ub:NoSuchClass"),      # rejected
+        ])
+    assert store.version == v0 and store.delta_size() == d0
+    # multi-op atomicity through apply_update: op 2 invalid -> op 1 unapplied
+    with pytest.raises(UpdateError):
+        store.apply_update("""
+            INSERT DATA { ub:LeakS ub:advisor ub:LeakO . }
+            DELETE DATA { ub:LeakS rdf:type ub:GraduateStudent . }
+        """)
+    assert store.version == v0 and store.delta_size() == d0
+    eng = SparqlEngine(store.snapshot(), maps)
+    assert eng.count("SELECT ?x WHERE { ub:LeakS ub:advisor ?x . }") == 0
+
+
+def test_auto_compaction_threshold():
+    g = _tiny_graph()
+    store = VersionedStore(g, compact_threshold=0.5, compact_min=2)
+    store.insert_edges([(0, 1, 1), (1, 0, 0)])
+    assert store.should_compact()
+    snap_before = store.snapshot()
+    assert snap_before.has_delta
+    snap = store.compact()
+    assert store.epoch == 1 and store.delta_size() == 0
+    assert not snap.has_delta
+    assert snap.base.n_edges == g.n_edges + 2
+    # ids survive compaction: the same edges are still present
+    assert base_has_edge(snap.base, 0, 1, 1) and base_has_edge(snap.base,
+                                                               1, 0, 0)
+
+
+def test_version_bumps_and_snapshot_caching():
+    g = _tiny_graph()
+    store = VersionedStore(g, auto_compact=False)
+    s0 = store.snapshot()
+    assert store.snapshot() is s0  # cached until a write
+    store.insert_edges([(0, 1, 2)])
+    s1 = store.snapshot()
+    assert s1 is not s0 and s1.version > s0.version
+    assert not store.insert_edges([(0, 1, 2)])  # duplicate: no version bump
+    assert store.snapshot() is s1
+
+
+def test_pvar_query_sees_delta(lubm_graph):
+    g, maps = lubm_graph
+    store = VersionedStore(g, maps, auto_compact=False)
+    eng = SparqlEngine(store.snapshot(), maps)
+    q = "SELECT ?p WHERE { ub:PVarSubj ?p ub:PVarObj . }"
+    assert eng.count(q) == 0
+    store.insert_triples([("ub:PVarSubj", "ub:brandNewPred", "ub:PVarObj")])
+    eng.set_graph(store.snapshot())
+    res = eng.query(q)
+    assert res.count == 1
+    assert [r["p"] for r in res.decode(maps)] == ["ub:brandNewPred"]
+    # deleting it again removes the binding (tombstone on the pvar path)
+    store.insert_triples([("ub:PVarSubj", "ub:advisor", "ub:PVarObj")])
+    store.delete_triples([("ub:PVarSubj", "ub:brandNewPred", "ub:PVarObj")])
+    eng.set_graph(store.snapshot())
+    res = eng.query(q)
+    assert [r["p"] for r in res.decode(maps)] == ["ub:advisor"]
+    # tombstone of a *base* edge must be masked on the pvar path too
+    q_all = "SELECT ?x ?p ?y WHERE { ?x ?p ?y . }"
+    total = eng.count(q_all)
+    d = maps.dict
+    s_id = int(np.flatnonzero(np.diff(g.out.indptr_all))[0])  # has an edge
+    o_id = int(g.out.nbr_all[g.out.indptr_all[s_id]])
+    el = int(g.out.lab_all[g.out.indptr_all[s_id]])
+    triple = (d.term(int(maps.vertex_to_term[s_id])),
+              d.predicate(int(maps.elabel_to_pred[el])),
+              d.term(int(maps.vertex_to_term[o_id])))
+    assert store.delete_triples([triple]) == 1
+    eng.set_graph(store.snapshot())
+    assert eng.count(q_all) == total - 1
