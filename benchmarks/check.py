@@ -1,0 +1,122 @@
+"""Benchmark regression gate: diff a fresh quick-suite snapshot against the
+committed ``BENCH_<suite>.quick.json`` baseline.
+
+Comparisons use machine-independent signals only — result counts must match
+exactly (a count change is a correctness bug, not noise) and *internal
+ratios* (pipelined-vs-legacy speedup, delta-vs-rebuild ingest speedup) must
+stay within a tolerance band.  Absolute microseconds are never compared:
+they vary with the host, but a ratio of two timings taken on the same host
+in the same run does not.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+
+TOLERANCE = 0.25  # fractional ratio drift allowed before we call regression
+
+_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def baseline_path(suite: str, quick: bool = True) -> str:
+    tag = ".quick" if quick else ""
+    return os.path.join(_DIR, f"BENCH_{suite}{tag}.json")
+
+
+def load_baseline(suite: str, quick: bool = True) -> dict | None:
+    path = baseline_path(suite, quick)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)["results"]
+
+
+def _geomean(xs: list[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return float("nan")
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def _ratio_drift(old: float, new: float) -> float:
+    """Fractional change of ``new`` relative to ``old`` (0.0 = unchanged)."""
+    if old <= 0 or new <= 0 or not (math.isfinite(old) and math.isfinite(new)):
+        return float("inf")
+    return abs(new / old - 1.0)
+
+
+def _check_exec(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Per-query counts exact; geomean pipelined-vs-legacy speedup within
+    tolerance (per-query speedups are noisy at quick scale; the geomean is
+    the suite's headline number)."""
+    bad = []
+    missing = sorted(set(base) - set(fresh))
+    if missing:
+        bad.append(f"exec: queries missing from fresh run: {missing}")
+    for q in sorted(set(base) & set(fresh)):
+        if base[q]["count"] != fresh[q]["count"]:
+            bad.append(f"exec: {q} count {fresh[q]['count']} != baseline "
+                       f"{base[q]['count']} (correctness regression)")
+    shared = sorted(set(base) & set(fresh))
+    g_old = _geomean([base[q]["speedup"] for q in shared])
+    g_new = _geomean([fresh[q]["speedup"] for q in shared])
+    if _ratio_drift(g_old, g_new) > tol and g_new < g_old:
+        bad.append(f"exec: geomean pipelined speedup {g_new:.3f} regressed "
+                   f">{tol:.0%} vs baseline {g_old:.3f}")
+    return bad
+
+
+def _check_planner(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Counts are the planner suite's correctness signal: every strategy
+    must still produce the same answers."""
+    bad = []
+    missing = sorted(set(base) - set(fresh))
+    if missing:
+        bad.append(f"planner: entries missing from fresh run: {missing}")
+    for q in sorted(set(base) & set(fresh)):
+        b, f = base[q], fresh[q]
+        if "count" in b and "count" in f and b["count"] != f["count"]:
+            bad.append(f"planner: {q} count {f['count']} != baseline "
+                       f"{b['count']} (correctness regression)")
+    return bad
+
+
+def _check_store(base: dict, fresh: dict, tol: float) -> list[str]:
+    """Delta-vs-rebuild speedups are internal ratios — compare directly."""
+    bad = []
+    for key in ("speedup_ingest", "speedup_wall"):
+        if key not in base or key not in fresh:
+            continue
+        old, new = float(base[key]), float(fresh[key])
+        if _ratio_drift(old, new) > tol and new < old:
+            bad.append(f"store: {key} {new:.2f} regressed >{tol:.0%} "
+                       f"vs baseline {old:.2f}")
+    return bad
+
+
+_CHECKERS = {"exec": _check_exec, "planner": _check_planner,
+             "update": _check_store}
+
+
+def compare(suite: str, base: dict, fresh: dict,
+            tol: float = TOLERANCE) -> list[str]:
+    """Return a list of regression descriptions (empty == pass)."""
+    checker = _CHECKERS.get(suite)
+    if checker is None:
+        return []
+    return checker(base, fresh, tol)
+
+
+def check_suite(suite: str, fresh: dict, quick: bool = True,
+                tol: float = TOLERANCE) -> list[str]:
+    """Gate one suite's fresh results against its committed baseline.
+    A missing baseline is reported (the gate is only meaningful when the
+    baseline is committed) but phrased so the fix is obvious."""
+    base = load_baseline(suite, quick)
+    if base is None:
+        return [f"{suite}: no committed baseline "
+                f"{os.path.basename(baseline_path(suite, quick))} — run "
+                f"`python -m benchmarks.run --quick --only ...` and commit it"]
+    return compare(suite, base, fresh, tol)

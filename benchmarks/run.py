@@ -3,6 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV rows.  ``--quick`` shrinks datasets
 (CI-sized); default sizes match EXPERIMENTS.md.  Select suites with
 ``--only lubm,opts``.
+
+``--check`` turns the run into a regression gate: each snapshot suite's
+fresh results are diffed against its committed ``BENCH_*.json`` baseline
+(see :mod:`benchmarks.check` — counts exact, internal speedup ratios within
+tolerance) and a regression exits non-zero.  ``--trace-out FILE`` wraps
+every suite in a :class:`repro.obs.Trace` span and writes Chrome
+``trace_event`` JSON for chrome://tracing / Perfetto.
 """
 
 from __future__ import annotations
@@ -31,16 +38,32 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help=f"comma list from {SUITES}")
+    ap.add_argument("--check", action="store_true",
+                    help="diff snapshot suites against committed BENCH_*"
+                         " baselines; exit 1 on regression")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="write a Chrome trace_event JSON of the run")
     args = ap.parse_args()
     chosen = args.only.split(",") if args.only else SUITES
+
+    trace = None
+    if args.trace_out:
+        from repro.obs import Trace, chrome_trace
+        trace = Trace("bench")
+
     print("name,us_per_call,derived", flush=True)
     t0 = time.time()
+    regressions: list[str] = []
     for suite in chosen:
         modname = SUITE_MODULES.get(suite, f"bench_{suite}")
         mod = __import__(f"benchmarks.{modname}", fromlist=["run"])
         t1 = time.time()
         try:
-            out = mod.run(quick=args.quick)
+            if trace is not None:
+                with trace.span(suite):
+                    out = mod.run(quick=args.quick)
+            else:
+                out = mod.run(quick=args.quick)
             if suite in SNAPSHOT_SUITES and isinstance(out, dict):
                 # quick runs land in a sibling file so smoke tests never
                 # clobber the committed full-scale trajectory baseline
@@ -49,6 +72,14 @@ def main() -> None:
                         else f"BENCH_{base}.json")
                 path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                     name)
+                if args.check:
+                    # gate BEFORE overwriting the committed snapshot
+                    from benchmarks import check
+
+                    found = check.check_suite(base, out, quick=args.quick)
+                    regressions.extend(found)
+                    status = "regressed" if found else "ok"
+                    print(f"_meta.{suite}.check,0,{status}", flush=True)
                 with open(path, "w") as f:
                     json.dump({"quick": args.quick, "results": out}, f,
                               indent=1, sort_keys=True)
@@ -62,6 +93,17 @@ def main() -> None:
         print(f"_meta.{suite}.suite_seconds,{(time.time() - t1) * 1e6:.0f},",
               flush=True)
     print(f"_meta.total_seconds,{(time.time() - t0) * 1e6:.0f},", flush=True)
+
+    if trace is not None:
+        trace.finish()
+        with open(args.trace_out, "w") as f:
+            f.write(chrome_trace(trace, as_text=True))
+        print(f"_meta.trace,0,{args.trace_out}", flush=True)
+
+    if args.check and regressions:
+        for r in regressions:
+            print(f"REGRESSION: {r}", file=sys.stderr, flush=True)
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,61 @@
+"""Trace a SPARQL query end to end: parse -> plan -> compile -> per-chunk
+dispatch -> per-step kernels, then print the span tree and write Chrome
+trace_event JSON for chrome://tracing / https://ui.perfetto.dev.
+
+    PYTHONPATH=src python examples/trace_query.py
+    PYTHONPATH=src python examples/trace_query.py --query Q8 --out trace.json
+"""
+
+import argparse
+import json
+
+from repro.core import SparqlEngine
+from repro.obs import chrome_trace
+from repro.rdf.generator import generate_lubm
+from repro.rdf.transform import type_aware_transform
+from repro.rdf.workloads import LUBM_QUERIES
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--query", default="Q2", choices=sorted(LUBM_QUERIES))
+ap.add_argument("--scale", type=int, default=2)
+ap.add_argument("--out", default=None, help="write Chrome trace JSON here")
+args = ap.parse_args()
+
+graph, maps = type_aware_transform(
+    generate_lubm(scale=args.scale, seed=0, density=0.6).finalize())
+engine = SparqlEngine(graph, maps)
+
+# First traced run: plan-cache miss, fresh XLA compiles show up as
+# "compile" spans.  trace=True forces profiled execution, so step spans
+# carry real device wall times.
+res = engine.query(LUBM_QUERIES[args.query], trace=True)
+trace = res.stats["trace_obj"]
+
+
+def show(span, depth=0):
+    meta = ", ".join(f"{k}={v}" for k, v in (span.meta or {}).items()
+                     if k in ("kernel", "step", "chunk", "hit", "rows",
+                              "kept", "model_ms"))
+    print(f"{'  ' * depth}{span.name:<14} {span.dur * 1e3:9.3f} ms"
+          f"{'  [' + meta + ']' if meta else ''}")
+    for child in span.children:
+        show(child, depth + 1)
+
+
+print(f"{args.query}: {res.count} rows, wall {trace.dur_ms:.1f} ms, "
+      f"spans account for {trace.span_sum_ms():.1f} ms\n")
+show(trace.root)
+
+# Second run hits the plan cache and the compiled-chunk cache: the same
+# query now shows "dispatch" spans instead of "compile".
+res2 = engine.query(LUBM_QUERIES[args.query], trace=True)
+trace2 = res2.stats["trace_obj"]
+print(f"\nsecond run (all caches warm): wall {trace2.dur_ms:.1f} ms, "
+      f"compiles={len(trace2.find('compile'))}, "
+      f"dispatches={len(trace2.find('dispatch'))}")
+
+if args.out:
+    with open(args.out, "w") as f:
+        json.dump(chrome_trace([trace, trace2]), f)
+    print(f"\nChrome trace written to {args.out} "
+          "(open in chrome://tracing or ui.perfetto.dev)")

@@ -44,6 +44,89 @@ CHIPS_SINGLE = 256
 COLL_FACTORS = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
                 "all-to-all": 1.0, "collective-permute": 1.0}
 
+# --------------------------------------------------------------------------
+# Binding-table kernel cost models (current repro.kernels API)
+#
+# First-order traffic/flop models for the executor's step kernels, keyed by
+# the names the dispatch layer (kernels/ops.py) actually exposes:
+# ``expand_filter`` (the fused expand/filter/compact Pallas kernel),
+# ``ragged_expand`` (the legacy expand + separate filter + scatter-compact
+# path), ``delta_merge`` / ``delta_merge_labeled`` (live-store snapshot
+# merge), and ``edge_exists`` (per-candidate binary-search join).  The
+# executor's trace annotations evaluate these per step so measured wall
+# time sits next to a roofline estimate in every span.
+#
+# Units: int32/float32 elements (4 B).  ``expanded`` = ragged expansion
+# total for the step, ``rows`` = input binding-table rows, ``capacity`` =
+# the step's capacity (table writes are capacity-shaped, not row-shaped),
+# ``nq`` = binding-table width, ``bitmap_words`` = label-bitmap words per
+# vertex, ``n_iters`` = binary-search iterations (≈ log2(max degree)).
+# --------------------------------------------------------------------------
+
+# (peak_flops/s, mem_bw B/s) used to turn a cost into model time; the TPU
+# row matches the chip constants above, cpu/gpu are order-of-magnitude
+# single-device defaults for annotation purposes.
+BACKEND_PEAKS = {
+    "tpu": (PEAK_FLOPS, HBM_BW),
+    "gpu": (6.0e13, 1.0e12),
+    "cpu": (2.0e11, 4.0e10),
+}
+
+KERNEL_MODELS = ("expand_filter", "ragged_expand", "delta_merge",
+                 "delta_merge_labeled", "edge_exists")
+
+
+def kernel_cost(kernel: str, *, expanded: float, rows: float = 0.0,
+                capacity: float = 0.0, nq: int = 4, bitmap_words: int = 1,
+                n_iters: int = 20) -> dict:
+    """Cost tuple ({flops, bytes, coll}) for one executor step kernel —
+    the same shape ``roofline_terms`` consumes."""
+    expanded = max(0.0, float(expanded))
+    rows = max(0.0, float(rows))
+    capacity = max(0.0, float(capacity))
+    w = max(1, int(bitmap_words))
+    it = max(1, int(n_iters))
+    table = capacity * (nq + 1) * 4.0  # one table image (B + pvar/org cols)
+    if kernel == "expand_filter":
+        # CSR degree/start reads, one neighbor gather + bitmap gather per
+        # expansion, in-kernel prefix sum, one gather-built output table
+        bytes_ = rows * 12.0 + expanded * (8.0 + 4.0 * w) + 2.0 * table
+        flops = expanded * (2.0 + w) + 2.0 * capacity
+    elif kernel == "ragged_expand":
+        # unfused: expansion triple (row, j, valid) materialized, filters
+        # re-read candidates, scatter-compact touches the padded table twice
+        bytes_ = rows * 12.0 + expanded * (16.0 + 4.0 * w) + 3.0 * table
+        flops = expanded * (4.0 + w) + 3.0 * capacity
+    elif kernel in ("delta_merge", "delta_merge_labeled"):
+        # base + delta CSR reads and a tombstone binary search per
+        # expansion on top of the unfused path; the labeled variant also
+        # reads/writes the edge-label column
+        lab = 8.0 if kernel == "delta_merge_labeled" else 0.0
+        bytes_ = (rows * 24.0 + expanded * (16.0 + lab + 4.0 * (w + it))
+                  + 3.0 * table)
+        flops = expanded * (6.0 + w + it) + 3.0 * capacity
+    elif kernel == "edge_exists":
+        # per-candidate binary search over the probe vertex's adjacency
+        bytes_ = expanded * 4.0 * it
+        flops = expanded * float(it)
+    else:
+        raise ValueError(f"unknown kernel {kernel!r}; "
+                         f"known: {KERNEL_MODELS}")
+    return {"flops": flops, "bytes": bytes_, "coll": {}}
+
+
+def estimate_step_ms(kernel: str, backend: str = "cpu", **kw) -> dict:
+    """Roofline time estimate for one executor step on one device.
+    Returns ``{model_ms, dominant, flops, bytes}`` — what the executor
+    attaches to kernel-level trace spans."""
+    cost = kernel_cost(kernel, **kw)
+    peak_f, bw = BACKEND_PEAKS.get(backend, BACKEND_PEAKS["cpu"])
+    compute_s = cost["flops"] / peak_f
+    memory_s = cost["bytes"] / bw
+    return {"model_ms": max(compute_s, memory_s) * 1e3,
+            "dominant": "compute" if compute_s >= memory_s else "memory",
+            "flops": cost["flops"], "bytes": cost["bytes"]}
+
 
 def _cost_tuple(rec: dict) -> dict:
     coll = rec.get("collective_bytes", {})
@@ -155,11 +238,7 @@ def analyze(dryrun_dir: Path, out_dir: Path, archs=None) -> list[dict]:
     rows = []
     for arch_name in (archs or all_archs()):
         arch = get_arch(arch_name)
-        if arch.family == "engine":
-            cells = sorted(arch.cells)
-        else:
-            cells = sorted(arch.cells)
-        for cell in cells:
+        for cell in sorted(arch.cells):
             rec_path = dryrun_dir / "single" / f"{arch_name}--{cell}.json"
             if not rec_path.exists():
                 continue

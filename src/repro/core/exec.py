@@ -692,8 +692,68 @@ def _empty_stats(n_steps: int) -> dict[str, Any]:
         "caps": [],
         "chunks": 0,
         "resumes": 0,
+        "compiles": 0,
         "wall_ms": 0.0,
     }
+
+
+def _step_kernel_name(dg: DeviceGraph, step: Step, sarr: dict,
+                      opts: ExecOpts, count_only: bool) -> str:
+    """Which kernel a step actually runs through — mirrors the dispatch
+    logic in ``build_chunk_fn`` (fused fast path vs. legacy ragged expand
+    vs. live-store delta merge)."""
+    merged = dg.delta_mode and ("d_iptr" in sarr or "t_iptr" in sarr)
+    if merged:
+        return "delta_merge" if step.elabel >= 0 else "delta_merge_labeled"
+    if _fused_eligible(step, opts) and not count_only:
+        return "expand_filter"
+    return "ragged_expand"
+
+
+def _annotate_step_spans(trace, plan: ExecPlan, dg: DeviceGraph, sarrs,
+                         opts: ExecOpts, stats: dict, collect: str,
+                         n_src: int) -> None:
+    """Attach one summary span per plan step: executed-counter meta
+    (rows/kept/retries/capacity), the kernel that ran, and a roofline
+    estimate next to the measured wall time (profiled runs only have real
+    per-step durations; sampled traces report zero-duration spans)."""
+    try:
+        from repro.analysis.roofline import estimate_step_ms
+    except Exception:  # pragma: no cover - annotation must never fail a run
+        estimate_step_ms = None
+    backend = jax.default_backend()
+    nq = plan.query.n_vertices
+    bitmap_words = int(dg.arrays["label_bitmap"].shape[1])
+    wall = stats.get("step_wall_ms")
+    caps = stats.get("caps") or []
+    rows_in = float(n_src)
+    for si, step in enumerate(plan.steps):
+        count_only = collect == "count" and si == len(plan.steps) - 1
+        kernel = _step_kernel_name(dg, step, sarrs[si], opts, count_only)
+        expanded = stats["step_rows"][si]
+        kept = stats["step_kept"][si]
+        cap = int(caps[si]) if si < len(caps) else 0
+        meta: dict[str, Any] = {
+            "step": si, "kernel": kernel, "rows": expanded, "kept": kept,
+            "retries": stats["step_retries"][si], "capacity": cap,
+        }
+        if step.nontree:
+            meta["nontree_checks"] = len(step.nontree)
+        if estimate_step_ms is not None:
+            est = estimate_step_ms(
+                kernel, backend=backend, expanded=expanded, rows=rows_in,
+                capacity=cap, nq=nq, bitmap_words=bitmap_words,
+                n_iters=dg.max_log_deg)
+            model_ms = est["model_ms"]
+            for _ in step.nontree:
+                model_ms += estimate_step_ms(
+                    "edge_exists", backend=backend, expanded=expanded,
+                    n_iters=dg.max_log_deg)["model_ms"]
+            meta["model_ms"] = round(model_ms, 6)
+            meta["model_dominant"] = est["dominant"]
+        dur_s = (wall[si] / 1e3) if wall is not None else 0.0
+        trace.add("step", dur_s, **meta)
+        rows_in = float(kept)
 
 
 class Executor:
@@ -764,7 +824,8 @@ class Executor:
         key = (plan.signature(), caps[start:stop], n_in, table_input,
                collect, start, stop, self.opts.key(), dg.key())
         fn = self._compiled.get(key)
-        if fn is None:
+        fresh = fn is None
+        if fresh:
             raw = build_chunk_fn(dg, plan, caps, n_in, self.opts,
                                  table_input, collect, start, stop)
             out_cap = caps[stop - 1] if stop > start else n_in
@@ -778,7 +839,9 @@ class Executor:
                 donate = (0, 2, 3)
             fn = jax.jit(raw, donate_argnums=donate)
             self._compiled[key] = fn
-        return fn
+        # freshness is returned (not kept on self) so concurrent runs on a
+        # shared executor each see their own compile events
+        return fn, fresh
 
     def _arrays(self, plan: ExecPlan,
                 state: tuple | None = None) -> list[dict[str, jax.Array]]:
@@ -921,19 +984,26 @@ class Executor:
         initial: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None,
         profile: bool | None = None,
         state: tuple | None = None,
+        trace=None,
     ) -> Result:
         """Execute a plan.  ``initial=(B0, P0, origins)`` runs the plan's
         steps as an *extension* of existing rows (OPTIONAL left joins).
         ``profile=True`` (or ``ExecOpts.profile``) executes step-by-step
         with host syncs to fill per-step wall times in ``Result.stats``.
         ``state`` pins a ``pin()``-captured (view, device-graph) pair so a
-        multi-run query stays on one snapshot under concurrent updates."""
+        multi-run query stays on one snapshot under concurrent updates.
+        ``trace`` (a :class:`repro.obs.Trace`) records compile / dispatch /
+        device-wait / per-step spans under the caller's current span; a
+        trace with ``profile_steps=True`` forces profiled execution so the
+        step spans carry real device wall times."""
         state = self.pin() if state is None else state
         view, dg = state
         if plan.unsat:
             return Result(0, _empty(plan), _empty_p(plan), np.zeros(0, np.int32))
         opts = self.opts
         profile = opts.profile if profile is None else profile
+        if trace is not None and trace.profile_steps:
+            profile = True
         nq = plan.query.n_vertices
 
         if initial is None and not plan.steps:
@@ -989,14 +1059,27 @@ class Executor:
             return (jnp.asarray(bpad), jnp.int32(n_real),
                     jnp.asarray(ppad), jnp.asarray(opad))
 
+        def call_fn(fn, fresh, args, **meta):
+            """One chunk-program invocation; with tracing on, the span is
+            named ``compile`` when this call triggers the first-dispatch
+            XLA compile (jit compiles synchronously inside the call) and
+            ``dispatch`` when it only enqueues the async chunk."""
+            if fresh:
+                stats["compiles"] += 1
+            if trace is None:
+                return fn(*args)
+            with trace.span("compile" if fresh else "dispatch", **meta):
+                return fn(*args)
+
         def dispatch(offset: int, hi: int) -> dict:
             args = host_args(offset, hi)
             used = tuple(caps)
-            fn = self._get_fn(plan, used, chunk_size, extension, collect,
-                              0, n_steps, dg)
+            fn, fresh = self._get_fn(plan, used, chunk_size, extension,
+                                     collect, 0, n_steps, dg)
+            ci = stats["chunks"]
             stats["chunks"] += 1
-            return {"out": fn(*args, sarrs), "args": args, "caps": used,
-                    "offset": offset}
+            return {"out": call_fn(fn, fresh, (*args, sarrs), chunk=ci),
+                    "args": args, "caps": used, "offset": offset}
 
         def accumulate(start: int, upto: int, acc_from: int, totals, kepts):
             """Fold one window's step counters into the run stats."""
@@ -1018,7 +1101,13 @@ class Executor:
             start = 0
             acc_from = 0
             while True:
-                ovf = int(ovf_step)  # device sync for this chunk's scalars
+                # device sync for this chunk's scalars — with tracing on,
+                # the host's wait for buffer-ready shows up as device_wait
+                if trace is None:
+                    ovf = int(ovf_step)
+                else:
+                    with trace.span("device_wait"):
+                        ovf = int(ovf_step)
                 accumulate(start, ovf, acc_from, totals, kepts)
                 acc_from = max(acc_from, min(ovf, n_steps))
                 if ovf >= n_steps:
@@ -1030,10 +1119,12 @@ class Executor:
                     # step's input
                     new_caps = _grow_caps(list(used), ovf, opts.max_cap)
                     n_in = used[ovf - 1] if ovf > 0 else chunk_size
-                    fn = self._get_fn(plan, tuple(new_caps), n_in, True,
-                                      collect, ovf, n_steps, dg)
-                    b, p, org, count, ovf_step, totals, kepts = fn(
-                        b[:n_in], count, p[:n_in], org[:n_in], sarrs)
+                    fn, fresh = self._get_fn(plan, tuple(new_caps), n_in,
+                                             True, collect, ovf, n_steps, dg)
+                    b, p, org, count, ovf_step, totals, kepts = call_fn(
+                        fn, fresh,
+                        (b[:n_in], count, p[:n_in], org[:n_in], sarrs),
+                        resume_step=ovf)
                     start = ovf
                     acc_from = ovf
                     stats["resumes"] += 1
@@ -1044,10 +1135,11 @@ class Executor:
                             f"binding-table overflow at max capacity "
                             f"{opts.max_cap}; raise ExecOpts.max_cap")
                     new_caps = [min(opts.max_cap, c * 2) for c in used]
-                    fn = self._get_fn(plan, tuple(new_caps), chunk_size,
-                                      extension, collect, 0, n_steps, dg)
-                    b, p, org, count, ovf_step, totals, kepts = fn(
-                        *rec["args"], sarrs)
+                    fn, fresh = self._get_fn(plan, tuple(new_caps),
+                                             chunk_size, extension, collect,
+                                             0, n_steps, dg)
+                    b, p, org, count, ovf_step, totals, kepts = call_fn(
+                        fn, fresh, (*rec["args"], sarrs), retry=True)
                     start = 0
                 used = new_caps
                 # persist the learned schedule for subsequent chunks
@@ -1072,7 +1164,7 @@ class Executor:
             if profile and n_steps:
                 self._run_profiled_chunk(plan, sarrs, offset, hi, chunk_size,
                                          extension, collect, caps_key, stats,
-                                         host_args, drain, dg)
+                                         host_args, drain, dg, trace)
             else:
                 pending.append(dispatch(offset, hi))
                 if len(pending) >= max_inflight:
@@ -1083,6 +1175,9 @@ class Executor:
 
         stats["caps"] = list(self._caps_cache[caps_key])
         stats["wall_ms"] = (time.perf_counter() - t_run0) * 1e3
+        if trace is not None and n_steps:
+            _annotate_step_spans(trace, plan, dg, sarrs, opts, stats,
+                                 collect, n_src)
         bindings = (np.concatenate(out_b) if out_b else _empty(plan)) \
             if collect == "bindings" else None
         pb = (np.concatenate(out_p) if out_p else _empty_p(plan)) \
@@ -1094,7 +1189,8 @@ class Executor:
 
     def _run_profiled_chunk(self, plan, sarrs, offset, hi, chunk_size,
                             extension, collect, caps_key, stats, host_args,
-                            drain, dg: DeviceGraph | None = None) -> None:
+                            drain, dg: DeviceGraph | None = None,
+                            trace=None) -> None:
         """Step-at-a-time execution of one chunk with host syncs, filling
         per-step wall times; overflow handling is inherently suffix-resume
         (each window re-runs alone with a doubled capacity)."""
@@ -1103,13 +1199,22 @@ class Executor:
         caps = self._caps_cache[caps_key]
         args = host_args(offset, hi)
         state = None
+        ci = stats["chunks"]
         stats["chunks"] += 1
         for si in range(n_steps):
             while True:
                 used = tuple(caps)
                 n_in = chunk_size if si == 0 else used[si - 1]
-                fn = self._get_fn(plan, used, n_in, extension or si > 0,
-                                  collect, si, si + 1, dg)
+                fn, fresh = self._get_fn(plan, used, n_in,
+                                         extension or si > 0,
+                                         collect, si, si + 1, dg)
+                if fresh:
+                    stats["compiles"] += 1
+                span_cm = (trace.span("compile" if fresh else "dispatch",
+                                      chunk=ci, step=si)
+                           if trace is not None else None)
+                if span_cm is not None:
+                    span_cm.__enter__()
                 t0 = time.perf_counter()
                 if si == 0:
                     out = fn(*args, sarrs)
@@ -1117,6 +1222,8 @@ class Executor:
                     b, p, org, count = state
                     out = fn(b[:n_in], count, p[:n_in], org[:n_in], sarrs)
                 jax.block_until_ready(out)
+                if span_cm is not None:
+                    span_cm.__exit__(None, None, None)
                 stats["step_wall_ms"][si] += (time.perf_counter() - t0) * 1e3
                 b, p, org, count, ovf_step, totals, kepts = out
                 if int(ovf_step) >= n_steps:

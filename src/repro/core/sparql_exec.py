@@ -26,6 +26,7 @@ per engine, and results are renamed back to the caller's variables.
 
 from __future__ import annotations
 
+import contextlib
 import re as _re
 from dataclasses import dataclass, field
 
@@ -40,6 +41,25 @@ from repro.rdf.transform import TransformMaps
 from repro.utils import get_logger
 
 log = get_logger("core.sparql")
+
+_NULL_CM = contextlib.nullcontext()
+
+
+def _maybe_span(trace, name: str, **meta):
+    """A trace span when tracing is on, else a shared no-op context."""
+    return trace.span(name, **meta) if trace is not None else _NULL_CM
+
+
+def _as_trace(trace):
+    """Normalize the public ``trace`` argument: False/None → off, True →
+    a fresh forced trace (profiled steps), a Trace instance → itself."""
+    if trace is None or trace is False:
+        return None
+    if trace is True:
+        from repro.obs import Trace
+
+        return Trace(profile_steps=True)
+    return trace
 
 
 @dataclass
@@ -175,7 +195,7 @@ class SparqlEngine:
         else:
             self.executor = Executor(g, self.opts)
 
-    def compile(self, source: str | SelectQuery):
+    def compile(self, source: str | SelectQuery, trace=None):
         """Canonicalize + compile through the plan cache.
 
         Returns ``(compiled, canon)`` where ``compiled`` is a (possibly
@@ -185,11 +205,17 @@ class SparqlEngine:
         """
         from repro.serve.fingerprint import canonicalize_query
 
-        ast = parse_sparql(source) if isinstance(source, str) else source
-        canon = canonicalize_query(ast)
-        return self.compile_canonical(canon), canon
+        if isinstance(source, str):
+            with _maybe_span(trace, "parse"):
+                ast = parse_sparql(source)
+        else:
+            ast = source
+        with _maybe_span(trace, "fingerprint"):
+            canon = canonicalize_query(ast)
+        return self.compile_canonical(canon, trace=trace), canon
 
-    def compile_canonical(self, canon, *, with_fresh: bool = False):
+    def compile_canonical(self, canon, *, with_fresh: bool = False,
+                          trace=None):
         """Compile a pre-canonicalized query through the plan cache.
 
         With ``with_fresh=True`` returns ``(compiled, fresh)`` where
@@ -199,8 +225,20 @@ class SparqlEngine:
         concurrent compilation."""
         compiled = self._plan_cache.get(canon.fingerprint)
         fresh = compiled is None
+        if trace is not None:
+            trace.event("plan_cache", hit=not fresh)
         if fresh:
-            compiled = self._compile_ast(canon.query, canon.fingerprint)
+            with _maybe_span(trace, "plan_search") as sp:
+                compiled = self._compile_ast(canon.query, canon.fingerprint)
+                if trace is not None:
+                    sp.meta.update(
+                        plan_ms=round(compiled.plan_ms, 3),
+                        est_rows=round(compiled.estimated_rows(), 1),
+                        branches=[
+                            {"order": explain_plan(br.plan).get("order", []),
+                             "search": br.plan.search,
+                             "est_rows": round(br.plan.estimated_rows(), 1)}
+                            for br in compiled.branches])
             # live store: an unsat verdict is only as old as this snapshot
             # (a later update may intern the missing term) — recompile such
             # queries instead of caching the verdict
@@ -211,7 +249,7 @@ class SparqlEngine:
 
     def execute_compiled(self, compiled: CompiledQuery,
                          collect: str = "bindings",
-                         profile: bool = False) -> QueryResult:
+                         profile: bool = False, trace=None) -> QueryResult:
         """Run a compiled query; result columns keep its variable names.
 
         ``collect="count"`` lets branches without OPTIONALs, post-hoc
@@ -221,7 +259,11 @@ class SparqlEngine:
         OFFSET / LIMIT force materialization even for counts — they are
         applied to the assembled table here, after UNION concatenation.
         ``profile=True`` executes with per-step host syncs to fill
-        per-step wall times in the stats."""
+        per-step wall times in the stats.  ``trace`` records an
+        ``execute`` span with per-branch / per-chunk / per-step children;
+        a forced trace (``profile_steps=True``) implies ``profile``."""
+        if trace is not None and trace.profile_steps:
+            profile = True
         all_rows: list[np.ndarray] = []
         total = 0
         exec_stats: list[dict] = []
@@ -235,31 +277,34 @@ class SparqlEngine:
         # object itself must be captured too, not re-read per branch
         executor = self.executor
         state = executor.pin()
-        for br in compiled.branches:
-            rows, count, info = self._exec_branch(
-                br, collect if not modifiers else "bindings", profile,
-                executor, state)
-            total += count
-            exec_stats.append(info)
-            base = info.get("base") or {}
-            for est, actual in zip(br.plan.est_rows,
-                                   base.get("step_kept") or []):
-                step_card.append((float(est), int(actual)))
-            if rows is not None:
-                if br.variables != variables:
-                    rows = _align_columns(rows, br.variables, variables)
-                all_rows.append(rows)
-        rows = np.concatenate(all_rows) if all_rows else np.zeros((0, 0), np.int32)
-        if modifiers:
-            if compiled.distinct:
-                rows = np.unique(rows, axis=0)
-            if compiled.offset:
-                rows = rows[compiled.offset:]
-            if compiled.limit is not None:
-                rows = rows[: compiled.limit]
-            total = int(rows.shape[0])
-        elif collect == "bindings":
-            total = int(rows.shape[0])
+        with _maybe_span(trace, "execute", branches=len(compiled.branches)):
+            for bi, br in enumerate(compiled.branches):
+                with _maybe_span(trace, "branch", index=bi):
+                    rows, count, info = self._exec_branch(
+                        br, collect if not modifiers else "bindings",
+                        profile, executor, state, trace)
+                total += count
+                exec_stats.append(info)
+                base = info.get("base") or {}
+                for est, actual in zip(br.plan.est_rows,
+                                       base.get("step_kept") or []):
+                    step_card.append((float(est), int(actual)))
+                if rows is not None:
+                    if br.variables != variables:
+                        rows = _align_columns(rows, br.variables, variables)
+                    all_rows.append(rows)
+            rows = (np.concatenate(all_rows) if all_rows
+                    else np.zeros((0, 0), np.int32))
+            if modifiers:
+                if compiled.distinct:
+                    rows = np.unique(rows, axis=0)
+                if compiled.offset:
+                    rows = rows[compiled.offset:]
+                if compiled.limit is not None:
+                    rows = rows[: compiled.limit]
+                total = int(rows.shape[0])
+            elif collect == "bindings":
+                total = int(rows.shape[0])
         return QueryResult(list(variables), rows, list(kinds),
                            count=total,
                            stats={"plan_ms": compiled.plan_ms,
@@ -267,14 +312,29 @@ class SparqlEngine:
                                   "exec": {"branches": exec_stats},
                                   "step_card": step_card})
 
-    def query(self, sparql: str, collect: str = "bindings") -> QueryResult:
-        ast = parse_sparql(sparql)
-        return self.query_ast(ast, collect=collect)
+    def query(self, sparql: str, collect: str = "bindings",
+              trace=False) -> QueryResult:
+        """Evaluate a SPARQL string.  ``trace=True`` forces a full trace
+        (profiled steps) and attaches the finished span tree as
+        ``result.stats["trace"]``; a :class:`repro.obs.Trace` instance may
+        also be passed to record into an existing trace."""
+        t = _as_trace(trace)
+        if t is None:
+            return self.query_ast(parse_sparql(sparql), collect=collect)
+        with t.span("parse"):
+            ast = parse_sparql(sparql)
+        return self.query_ast(ast, collect=collect, trace=t)
 
-    def query_ast(self, ast: SelectQuery, collect: str = "bindings") -> QueryResult:
-        compiled, canon = self.compile(ast)
-        res = self.execute_compiled(compiled, collect=collect)
+    def query_ast(self, ast: SelectQuery, collect: str = "bindings",
+                  trace=False) -> QueryResult:
+        t = _as_trace(trace)
+        compiled, canon = self.compile(ast, trace=t)
+        res = self.execute_compiled(compiled, collect=collect, trace=t)
         res.variables = canon.restore(res.variables)
+        if t is not None:
+            t.finish()
+            res.stats["trace"] = t.to_dict()
+            res.stats["trace_obj"] = t
         return res
 
     def count(self, sparql: str) -> int:
@@ -291,11 +351,26 @@ class SparqlEngine:
         surviving rows, overflow retries, and wall time — the
         estimate-vs-actual view (SQL's EXPLAIN ANALYZE)."""
         compiled, canon = self.compile(source)
-        inverse = canon.inverse
         run_stats = None
         if analyze:
             res = self.execute_compiled(compiled, profile=True)
             run_stats = res.stats
+        out = self.describe_compiled(compiled, run_stats=run_stats,
+                                     inverse=canon.inverse)
+        if run_stats is not None:
+            out["actual_rows"] = res.count
+        return out
+
+    def describe_compiled(self, compiled: CompiledQuery,
+                          run_stats: dict | None = None,
+                          inverse: dict | None = None) -> dict:
+        """EXPLAIN-style JSON for an already-compiled query.  With
+        ``run_stats`` (a ``QueryResult.stats`` from any execution) the
+        steps carry measured counters — the EXPLAIN ANALYZE view without
+        re-running; the slow-query log uses exactly this to file the
+        annotated plan next to each recorded trace.  ``inverse`` maps
+        canonical variable names back to the caller's."""
+        inverse = inverse or {}
 
         def restore_names(obj):
             if isinstance(obj, str) and obj.startswith("?"):
@@ -319,16 +394,13 @@ class SparqlEngine:
                     if oi < len(opts_info):
                         _annotate_steps(od, opts_info[oi])
             branches.append(restore_names(b))
-        out = {
+        return {
             "fingerprint": compiled.fingerprint,
             "estimate": self.estimate,
             "plan_ms": round(compiled.plan_ms, 3),
             "est_total_rows": round(compiled.estimated_rows(), 1),
             "branches": branches,
         }
-        if run_stats is not None:
-            out["actual_rows"] = res.count
-        return out
 
     # --------------------------------------------------------- compilation
     def _compile_ast(self, ast: SelectQuery, fingerprint: str) -> CompiledQuery:
@@ -383,14 +455,14 @@ class SparqlEngine:
     # ------------------------------------------------------------ execution
     def _exec_branch(self, br: CompiledBranch, collect: str = "bindings",
                      profile: bool = False, executor=None,
-                     state: tuple | None = None):
+                     state: tuple | None = None, trace=None):
         """Run one branch; returns ``(rows | None, count, exec_stats)``."""
         executor = self.executor if executor is None else executor
         count_only = (collect == "count" and not br.optionals
                       and not br.expensive)
         res = executor.run(
             br.plan, collect="count" if count_only else "bindings",
-            profile=profile, state=state)
+            profile=profile, state=state, trace=trace)
         info: dict = {"base": res.stats}
         if count_only:
             return None, res.count, info
@@ -398,10 +470,11 @@ class SparqlEngine:
                                                  res.pvar_bindings,
                                                  br.q, br.expensive)
         opt_stats: list[dict] = []
-        for co in br.optionals:
-            table, ptable, ost = self._exec_left_join(table, ptable, co,
-                                                      profile, executor,
-                                                      state)
+        for oi, co in enumerate(br.optionals):
+            with _maybe_span(trace, "optional", index=oi):
+                table, ptable, ost = self._exec_left_join(table, ptable, co,
+                                                          profile, executor,
+                                                          state, trace)
             opt_stats.append(ost)
         if opt_stats:
             info["optionals"] = opt_stats
@@ -440,7 +513,8 @@ class SparqlEngine:
 
     def _exec_left_join(self, table: np.ndarray, ptable: np.ndarray,
                         co: CompiledOptional, profile: bool = False,
-                        executor=None, state: tuple | None = None):
+                        executor=None, state: tuple | None = None,
+                        trace=None):
         """Left-outer join a compiled OPTIONAL extension onto the table."""
         q_ext, plan, expensive = co.q_ext, co.plan, co.expensive
         nq_ext = q_ext.n_vertices
@@ -456,7 +530,7 @@ class SparqlEngine:
         else:
             executor = self.executor if executor is None else executor
             matched = executor.run(plan, initial=(b0, p0, org0),
-                                   profile=profile, state=state)
+                                   profile=profile, state=state, trace=trace)
         mt, mp, morg = self._apply_expensive(matched.bindings,
                                              matched.pvar_bindings,
                                              q_ext, expensive,
@@ -531,6 +605,7 @@ def _annotate_steps(plan_desc: dict, exec_stats: dict | None) -> None:
     plan_desc["exec"] = {
         "chunks": exec_stats.get("chunks", 0),
         "resumes": exec_stats.get("resumes", 0),
+        "compiles": exec_stats.get("compiles", 0),
         "wall_ms": round(float(exec_stats.get("wall_ms", 0.0)), 3),
     }
 

@@ -84,7 +84,9 @@ def build_dataset(name: str, scale: int, density: float):
 def _build_registry(args) -> tuple[DatasetRegistry, dict[str, dict[str, str]]]:
     metrics = ServeMetrics()
     registry = DatasetRegistry(metrics,
-                               result_cache_size=args.result_cache_size)
+                               result_cache_size=args.result_cache_size,
+                               slow_log_size=args.slow_log,
+                               trace_sample=args.trace_sample)
     workloads: dict[str, dict[str, str]] = {}
     for name in args.dataset.split(","):
         name = name.strip()
@@ -201,6 +203,12 @@ def main(argv=None) -> None:
                     help="per-request deadline")
     ap.add_argument("--result-cache-size", type=int, default=0,
                     help="entries per dataset (0 disables result caching)")
+    ap.add_argument("--trace-sample", type=float, default=0.0,
+                    help="fraction of requests traced on the fast path to "
+                         "feed /debug/slow and span histograms (0 disables)")
+    ap.add_argument("--slow-log", type=int, default=32,
+                    help="worst traced executions kept per dataset "
+                         "(0 disables the slow-query log)")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--http", action="store_true",
                     help="serve HTTP instead of running the workload")

@@ -1,0 +1,14 @@
+"""Structured tracing for the query path (PR: end-to-end observability).
+
+``Trace`` collects a tree of spans — parse → fingerprint → plan →
+compile → per-chunk dispatch → per-step kernel — cheaply enough to stay
+in the serving hot path (off by default, sampled or forced per request).
+``SlowQueryLog`` keeps the N worst traces per dataset for the
+``/debug/slow`` endpoint; ``chrome_trace`` renders a trace as Chrome's
+``trace_event`` JSON for one-click flamegraph viewing.
+"""
+
+from repro.obs.slowlog import SlowQueryLog
+from repro.obs.trace import Span, Trace, chrome_trace
+
+__all__ = ["Span", "Trace", "SlowQueryLog", "chrome_trace"]

@@ -84,6 +84,13 @@ class Gauge:
 DEFAULT_BUCKETS_MS = (0.5, 1, 2.5, 5, 10, 25, 50, 100, 250, 500,
                       1000, 2500, 5000, 10000, math.inf)
 
+# Log-spaced 1µs .. 10s ladder (seconds) for trace-span histograms: spans
+# range from sub-ms cache probes to multi-second first-dispatch compiles,
+# so the default ms ladder would dump everything in its two edge buckets.
+FINE_BUCKETS_S = tuple(m * 10.0 ** e
+                       for e in range(-6, 1) for m in (1, 2.5, 5)) + \
+                 (10.0, math.inf)
+
 
 class Histogram:
     """Latency histogram in milliseconds."""
@@ -146,6 +153,85 @@ class Histogram:
         return lines
 
 
+class LabeledHistogram:
+    """A family of histograms sharing one metric name, split by a single
+    label (e.g. ``repro_span_seconds{span="compile"}``).  Children are
+    created on first observation; unit is whatever the bucket ladder is in
+    (`FINE_BUCKETS_S` = seconds)."""
+
+    def __init__(self, name: str, help: str = "", label: str = "label",
+                 buckets=DEFAULT_BUCKETS_MS, reservoir: int = 1024):
+        self.name, self.help, self.label = name, help, label
+        self.buckets = tuple(buckets)
+        self._reservoir = reservoir
+        self._children: dict[str, Histogram] = {}
+        self._lock = threading.Lock()
+
+    def child(self, value: str) -> Histogram:
+        with self._lock:
+            h = self._children.get(value)
+            if h is None:
+                h = Histogram(self.name, buckets=self.buckets,
+                              reservoir=self._reservoir)
+                self._children[value] = h
+            return h
+
+    def observe(self, value: str, x: float) -> None:
+        self.child(value).observe(x)
+
+    def render(self) -> list[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} histogram"]
+        with self._lock:
+            children = sorted(self._children.items())
+        for lv, h in children:
+            with h._lock:
+                counts, total, count = list(h._counts), h._sum, h._count
+            cum = 0
+            for b, c in zip(self.buckets, counts):
+                cum += c
+                le = "+Inf" if math.isinf(b) else f"{b:g}"
+                lines.append(f'{self.name}_bucket{{{self.label}="{lv}",'
+                             f'le="{le}"}} {cum}')
+            lines.append(f'{self.name}_sum{{{self.label}="{lv}"}} {total:g}')
+            lines.append(f'{self.name}_count{{{self.label}="{lv}"}} {count}')
+        return lines
+
+
+class LabeledGauge:
+    """A gauge family split by a single label (e.g. per-dataset in-flight
+    query counts)."""
+
+    def __init__(self, name: str, help: str = "", label: str = "label"):
+        self.name, self.help, self.label = name, help, label
+        self._values: dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def set(self, value: str, v: float) -> None:
+        with self._lock:
+            self._values[value] = float(v)
+
+    def inc(self, value: str, n: float = 1.0) -> None:
+        with self._lock:
+            self._values[value] = self._values.get(value, 0.0) + n
+
+    def dec(self, value: str, n: float = 1.0) -> None:
+        self.inc(value, -n)
+
+    def value(self, value: str) -> float:
+        with self._lock:
+            return self._values.get(value, 0.0)
+
+    def render(self) -> list[str]:
+        lines = [f"# HELP {self.name} {self.help}",
+                 f"# TYPE {self.name} gauge"]
+        with self._lock:
+            items = sorted(self._values.items())
+        for lv, v in items:
+            lines.append(f'{self.name}{{{self.label}="{lv}"}} {v:g}')
+        return lines
+
+
 class MetricsRegistry:
     """Holds metrics and renders the Prometheus text exposition."""
 
@@ -174,6 +260,20 @@ class MetricsRegistry:
         with self._lock:
             m = self._metrics.get(name)
         return m if m is not None else self._register(Histogram(name, help, **kw))
+
+    def labeled_histogram(self, name: str, help: str = "",
+                          **kw) -> LabeledHistogram:
+        with self._lock:
+            m = self._metrics.get(name)
+        return m if m is not None else self._register(
+            LabeledHistogram(name, help, **kw))
+
+    def labeled_gauge(self, name: str, help: str = "",
+                      label: str = "label") -> LabeledGauge:
+        with self._lock:
+            m = self._metrics.get(name)
+        return m if m is not None else self._register(
+            LabeledGauge(name, help, label))
 
     def render(self) -> str:
         with self._lock:
@@ -232,6 +332,22 @@ class ServeMetrics:
         self.compactions = r.counter(
             "repro_store_compactions_total",
             "live-store delta compactions (base graph rebuilds)")
+        self.span_seconds = r.labeled_histogram(
+            "repro_span_seconds",
+            "top-level trace span duration in seconds, by span name",
+            label="span", buckets=FINE_BUCKETS_S, reservoir=1024)
+        self.compile_events = r.counter(
+            "repro_compile_events_total",
+            "fresh XLA chunk-program compiles observed on the query path")
+        self.traces = r.counter(
+            "repro_traces_total", "traces recorded, by mode (forced/sampled)")
+        self.slow_queries = r.counter(
+            "repro_slow_log_inserts_total",
+            "executions admitted to a dataset's slow-query log")
+        self.dataset_inflight = r.labeled_gauge(
+            "repro_dataset_inflight_queries",
+            "queries submitted and not yet completed, per dataset",
+            label="dataset")
         self._completions: deque[float] = deque(maxlen=65536)
         self._started = time.monotonic()
         self._lock = threading.Lock()
@@ -245,6 +361,26 @@ class ServeMetrics:
     def record_plan_search(self, ms: float) -> None:
         """Planner wall time for a freshly compiled (cache-miss) query."""
         self.plan_search.observe(ms)
+
+    def bind_queue_depth(self, fn) -> None:
+        """Make the queue-depth gauge sample ``fn()`` at render time (the
+        scheduler binds its live queue size here at start())."""
+        self.queue_depth._fn = fn
+
+    def record_trace(self, trace) -> None:
+        """Fold one finished trace into the span histograms: every span in
+        the tree lands in ``repro_span_seconds{span=...}``.  (Compile
+        events are counted from ``Result.stats`` on *every* execution, not
+        here, so traced runs are not double-counted.)"""
+        self.traces.inc(mode="forced" if trace.profile_steps else "sampled")
+
+        def walk(span):
+            self.span_seconds.observe(span.name, span.dur)
+            for c in span.children:
+                walk(c)
+
+        for child in trace.root.children:
+            walk(child)
 
     def record_cardinality(self, estimated: float, actual: int) -> None:
         """Estimate-vs-actual error as |log10((est+1)/(actual+1))| — 0 is a
@@ -277,6 +413,9 @@ class ServeMetrics:
                 r.gauge(f"repro_{kind}_cache_{stat}_{dataset}",
                         f"{kind} cache {stat} for dataset {dataset}",
                         fn=lambda c=cache, s=stat: getattr(c.stats, s))
+            r.gauge(f"repro_{kind}_cache_hit_ratio_{dataset}",
+                    f"{kind} cache hit ratio for dataset {dataset}",
+                    fn=lambda c=cache: c.stats.hit_rate)
 
     def summary(self) -> dict:
         out = {"requests": self.requests.total(),

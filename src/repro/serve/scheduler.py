@@ -14,6 +14,7 @@ its deadline is dropped without executing.
 
 from __future__ import annotations
 
+import contextlib
 import queue
 import threading
 import time
@@ -26,6 +27,11 @@ from repro.serve.metrics import ServeMetrics
 from repro.utils import get_logger
 
 log = get_logger("serve.scheduler")
+
+
+def _maybe_span(trace, name: str, **meta):
+    return (trace.span(name, **meta) if trace is not None
+            else contextlib.nullcontext())
 
 
 class SchedulerError(RuntimeError):
@@ -55,6 +61,7 @@ class _Flight:
     result: QueryResult | None = None
     error: Exception | None = None
     waiters: int = 1
+    trace: object | None = None  # repro.obs.Trace for forced-trace requests
 
 
 _SENTINEL = object()
@@ -90,6 +97,7 @@ class Scheduler:
             if self._running:
                 return self
             self._running = True
+        self.metrics.bind_queue_depth(self._queue.qsize)
         for i in range(self._n_workers):
             t = threading.Thread(target=self._worker, daemon=True,
                                  name=f"serve-worker-{i}")
@@ -117,22 +125,39 @@ class Scheduler:
 
     # ------------------------------------------------------------- submit
     def submit(self, dataset: str, query: str | SelectQuery | CanonicalQuery,
-               timeout_s: float | None = None) -> QueryResult:
+               timeout_s: float | None = None,
+               trace: bool = False) -> QueryResult:
         """Execute (or join) a query; returns bindings with the caller's
         variable names.  Raises ``Overloaded`` / ``DeadlineExceeded`` /
-        parse and plan errors from the engine."""
+        parse and plan errors from the engine.
+
+        ``trace=True`` forces a profiled :class:`repro.obs.Trace` for this
+        request: the result's ``stats["trace"]`` carries the span tree.
+        Forced-trace flights never coalesce (each requester wants *their*
+        execution observed), and parse/canonicalize happen inside the trace
+        so the span sum accounts for the submitting thread's work too."""
         if not self._running:
             raise SchedulerStopped("scheduler is not running; call start()")
         t0 = time.perf_counter()
+        t = None
+        if trace:
+            from repro.obs import Trace
+            t = Trace(profile_steps=True)
         if isinstance(query, CanonicalQuery):
             canon = query
         else:
-            ast = parse_sparql(query) if isinstance(query, str) else query
-            canon = canonicalize_query(ast)
+            if isinstance(query, str):
+                with _maybe_span(t, "parse"):
+                    query = parse_sparql(query)
+            with _maybe_span(t, "fingerprint"):
+                canon = canonicalize_query(query)
         version = self.registry.version(dataset)
         timeout = self.default_timeout_s if timeout_s is None else timeout_s
         deadline = time.monotonic() + timeout
         key = (dataset, canon.fingerprint, version)
+        if t is not None:
+            # unique tail: a forced trace must execute, never coalesce
+            key = key + (("trace", t.trace_id),)
 
         with self._lock:
             flight = self._inflight.get(key)
@@ -148,11 +173,12 @@ class Scheduler:
                     raise Overloaded(
                         f"queue full ({self.max_queue} flights pending)")
                 flight = _Flight(key=key, dataset=dataset, canonical=canon,
-                                 version=version, deadline=deadline)
+                                 version=version, deadline=deadline, trace=t)
                 self._inflight[key] = flight
                 self._queue.put(flight)
                 coalesced = False
         self.metrics.inflight.inc()
+        self.metrics.dataset_inflight.inc(dataset)
         self.metrics.queue_depth.set(self._queue.qsize())
         try:
             finished = flight.done.wait(max(0.0, deadline - time.monotonic()))
@@ -175,6 +201,7 @@ class Scheduler:
                                stats=dict(res.stats))
         finally:
             self.metrics.inflight.dec()
+            self.metrics.dataset_inflight.dec(dataset)
 
     # ------------------------------------------------------------- worker
     def _worker(self) -> None:
@@ -198,8 +225,15 @@ class Scheduler:
             err: Exception | None = None
             result = None
             try:
-                result = self.registry.execute_canonical(
-                    flight.dataset, flight.canonical, flight.version)
+                # pass trace only when set so duck-typed registries that
+                # don't know the kwarg (tests, custom backends) keep working
+                if flight.trace is not None:
+                    result = self.registry.execute_canonical(
+                        flight.dataset, flight.canonical, flight.version,
+                        trace=flight.trace)
+                else:
+                    result = self.registry.execute_canonical(
+                        flight.dataset, flight.canonical, flight.version)
             except Exception as e:  # noqa: BLE001 — fan the error out
                 err = e
             with self._lock:

@@ -14,7 +14,19 @@ bump is the explicit invalidation point for cached results.
   bindings; ``explain=1`` returns the compiled plan (matching order,
   per-step cardinality estimates) without executing;
 - ``GET /healthz`` — liveness + hosted datasets;
-- ``GET /metrics`` — Prometheus text exposition.
+- ``GET /metrics`` — Prometheus text exposition;
+- ``GET /debug/slow`` — per-dataset slow-query log digest (worst traced
+  executions by fingerprint);
+- ``GET /debug/trace?id=N`` — one logged trace in full: span tree +
+  EXPLAIN-ANALYZE-style plan, or Chrome ``trace_event`` JSON with
+  ``format=chrome`` (load in chrome://tracing / Perfetto).
+
+``/sparql`` additionally accepts ``trace=1``: the request executes in
+profiled mode with a forced :class:`repro.obs.Trace` and the response
+carries the span tree under ``"trace"``.  A registry-level
+``trace_sample`` rate traces that fraction of ordinary requests on the
+fast path (zero-duration step spans) to feed the slow-query log and the
+``repro_span_seconds`` histograms without the profiled path's overhead.
 
 Requests flow through the :class:`~repro.serve.scheduler.Scheduler`, so
 identical concurrent queries coalesce and overload returns 503 rather than
@@ -24,6 +36,7 @@ piling onto the engine.
 from __future__ import annotations
 
 import json
+import random
 import threading
 from dataclasses import dataclass, field
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
@@ -33,6 +46,7 @@ from repro.core.exec import ExecOpts
 from repro.core.planner import PlanError
 from repro.core.query import QueryBuildError
 from repro.core.sparql_exec import QueryResult, SparqlEngine
+from repro.obs import SlowQueryLog, Trace
 from repro.rdf.sparql import SparqlError
 from repro.serve.cache import PlanCache, ResultCache
 from repro.serve.fingerprint import CanonicalQuery
@@ -62,6 +76,7 @@ class HostedDataset:
     store: object = None  # VersionedStore when updatable
     version: int = 0
     lock: threading.Lock = field(default_factory=threading.Lock)
+    slow_log: SlowQueryLog = field(default_factory=SlowQueryLog)
 
     def current_graph(self):
         return self.store.snapshot() if self.store is not None else self.graph
@@ -71,10 +86,13 @@ class DatasetRegistry:
     """Named graphs + engines, the unit the scheduler executes against."""
 
     def __init__(self, metrics: ServeMetrics | None = None, *,
-                 plan_cache_size: int = 256, result_cache_size: int = 0):
+                 plan_cache_size: int = 256, result_cache_size: int = 0,
+                 slow_log_size: int = 32, trace_sample: float = 0.0):
         self.metrics = metrics or ServeMetrics()
         self._default_plan_cache_size = plan_cache_size
         self._default_result_cache_size = result_cache_size
+        self._slow_log_size = slow_log_size
+        self.trace_sample = min(1.0, max(0.0, float(trace_sample)))
         self._datasets: dict[str, HostedDataset] = {}
         self._lock = threading.Lock()
 
@@ -100,7 +118,8 @@ class DatasetRegistry:
         engine = SparqlEngine(engine_graph, maps, opts, plan_cache=plan_cache)
         ds = HostedDataset(name=name, graph=graph, maps=maps, engine=engine,
                            result_cache=result_cache, store=store,
-                           version=store.version if store is not None else 0)
+                           version=store.version if store is not None else 0,
+                           slow_log=SlowQueryLog(self._slow_log_size))
         with self._lock:
             self._datasets[name] = ds
         self.metrics.attach_cache_gauges(name, plan_cache, result_cache)
@@ -184,32 +203,66 @@ class DatasetRegistry:
 
     # ----------------------------------------------------------- execution
     def execute_canonical(self, name: str, canon: CanonicalQuery,
-                          version: int) -> QueryResult:
-        """Execute over canonical variable names (scheduler entry point)."""
+                          version: int, trace: Trace | None = None
+                          ) -> QueryResult:
+        """Execute over canonical variable names (scheduler entry point).
+
+        ``trace`` is a live :class:`repro.obs.Trace` (forced request);
+        when absent, ``trace_sample`` of executions get a sampled trace on
+        the fast path.  Traced executions bypass the result cache (there is
+        nothing to observe about returning a stored object) and feed the
+        slow-query log + span histograms."""
         ds = self.get(name)
         key = (canon.fingerprint, version)
-        if ds.result_cache.enabled:
+        if trace is None and self.trace_sample > 0.0 \
+                and random.random() < self.trace_sample:
+            trace = Trace(sampled=True)
+        if ds.result_cache.enabled and trace is None:
             hit = ds.result_cache.get(key)
             if hit is not None:
                 return hit
-        compiled, fresh = ds.engine.compile_canonical(canon, with_fresh=True)
+        if trace is not None and trace.root.children:
+            # scheduler-submitted trace: account the time between the
+            # submitting thread's last span and this worker picking it up
+            last = trace.root.children[-1]
+            gap = trace._now() - (last.t0 + last.dur)
+            if gap > 0:
+                trace.add("queue_wait", gap)
+        compiled, fresh = ds.engine.compile_canonical(canon, with_fresh=True,
+                                                      trace=trace)
         if fresh:
             self.metrics.record_plan_search(compiled.plan_ms)
-        res = ds.engine.execute_compiled(compiled)
+        res = ds.engine.execute_compiled(
+            compiled, trace=trace,
+            profile=trace.profile_steps if trace is not None else False)
         est = res.stats.get("est_rows")
         if est is not None:
             self.metrics.record_cardinality(est, res.count)
         for step_est, step_actual in res.stats.get("step_card", ()):
             self.metrics.record_step_cardinality(step_est, step_actual)
         exec_stats = res.stats.get("exec") or {}
-        retries = sum(
-            sum(part.get("step_retries", ()))
-            for br in exec_stats.get("branches", ())
-            for part in ([br.get("base") or {}]
-                         + list(br.get("optionals") or ())))
+        parts = [part
+                 for br in exec_stats.get("branches", ())
+                 for part in ([br.get("base") or {}]
+                              + list(br.get("optionals") or ()))]
+        retries = sum(sum(part.get("step_retries", ())) for part in parts)
         if retries:
             self.metrics.exec_retries.inc(retries)
-        if ds.result_cache.enabled and version == ds.version:
+        compiles = sum(part.get("compiles", 0) for part in parts)
+        if compiles:
+            self.metrics.compile_events.inc(compiles)
+        if trace is not None:
+            trace.finish()
+            self.metrics.record_trace(trace)
+            explain = ds.engine.describe_compiled(compiled,
+                                                  run_stats=res.stats,
+                                                  inverse=canon.inverse)
+            if ds.slow_log.record(canon.fingerprint, trace.dur_ms, trace,
+                                  dataset=name, count=res.count,
+                                  explain=explain):
+                self.metrics.slow_queries.inc(dataset=name)
+            res.stats["trace"] = trace.to_dict()
+        elif ds.result_cache.enabled and version == ds.version:
             ds.result_cache.put(key, res)
         return res
 
@@ -233,6 +286,20 @@ class DatasetRegistry:
         ``analyze=True`` executes in profiled mode and adds per-step
         actual rows / retries / wall times (``explain=analyze``)."""
         return self.get(name).engine.explain(sparql, analyze=analyze)
+
+    # -------------------------------------------------------- observability
+    def slow_summaries(self, name: str | None = None) -> dict:
+        """Slow-query-log digests, per dataset (no span trees)."""
+        names = [name] if name is not None else self.names()
+        return {n: self.get(n).slow_log.summaries() for n in names}
+
+    def find_trace(self, trace_id: int) -> dict | None:
+        """Locate one logged trace entry by id across all datasets."""
+        for n in self.names():
+            entry = self.get(n).slow_log.get(trace_id)
+            if entry is not None:
+                return entry
+        return None
 
     def stats(self) -> dict:
         out = {}
@@ -308,6 +375,29 @@ class _Handler(BaseHTTPRequestHandler):
         elif url.path == "/sparql":
             params = {k: v[-1] for k, v in parse_qs(url.query).items()}
             self._handle_sparql(params)
+        elif url.path == "/debug/slow":
+            params = {k: v[-1] for k, v in parse_qs(url.query).items()}
+            try:
+                out = self.server.registry.slow_summaries(
+                    params.get("dataset"))
+            except UnknownDataset as e:
+                self._error(404, f"unknown dataset: {e}")
+            else:
+                self._send_json(200, {"slow": out})
+        elif url.path == "/debug/trace":
+            params = {k: v[-1] for k, v in parse_qs(url.query).items()}
+            try:
+                trace_id = int(params["id"])
+            except (KeyError, ValueError):
+                self._error(400, "missing or non-integer 'id' parameter")
+                return
+            entry = self.server.registry.find_trace(trace_id)
+            if entry is None:
+                self._error(404, f"no logged trace with id {trace_id} "
+                                 "(evicted, or never recorded)")
+                return
+            fmt = "chrome" if params.get("format") == "chrome" else "json"
+            self._send_json(200, SlowQueryLog.render_entry(entry, fmt))
         else:
             self._error(404, f"no such endpoint: {url.path}")
 
@@ -386,6 +476,8 @@ class _Handler(BaseHTTPRequestHandler):
             explain_param = str(params.get("explain", "")).lower()
             explain = explain_param in ("1", "true", "yes", "analyze")
             analyze = explain_param == "analyze"
+            trace = (str(params.get("trace", "")).lower()
+                     in ("1", "true", "yes"))
         except (ValueError, UnknownDataset) as e:
             self._error(400, str(e))
             return
@@ -416,7 +508,8 @@ class _Handler(BaseHTTPRequestHandler):
             return
         try:
             res = self.server.scheduler.submit(dataset, query,
-                                               timeout_s=timeout_s)
+                                               timeout_s=timeout_s,
+                                               trace=trace)
         except UnknownDataset as e:
             self._error(404, f"unknown dataset: {e}")
         except (SparqlError, QueryBuildError, PlanError) as e:
@@ -431,7 +524,10 @@ class _Handler(BaseHTTPRequestHandler):
             log.exception("internal error serving query")
             self._error(500, f"internal error: {e}")
         else:
-            self._send_json(200, _bindings_json(registry, dataset, res, limit))
+            out = _bindings_json(registry, dataset, res, limit)
+            if trace and res.stats.get("trace") is not None:
+                out["trace"] = res.stats["trace"]
+            self._send_json(200, out)
 
 
 class SparqlHTTPServer(ThreadingHTTPServer):
