@@ -1,0 +1,135 @@
+"""Signature/summary pruning benchmark: prune-off vs prune-on.
+
+Head-to-head on LUBM and BSBM queries with the neighborhood-signature
+index disabled (``use_prune=False`` + ``use_sig=False`` plans — the
+pre-index executor) and enabled (defaults).  Counts must agree exactly
+(pruning is sound, never lossy); the headline metrics are
+
+  speedup         — prune-off wall / prune-on wall,
+  cand_reduction  — surviving candidate rows carried between plan steps
+                    (sum of per-step ``step_kept``, the binding-table
+                    rows feeding each subsequent join) without the index
+                    vs with it — the paper's "candidate region shrink".
+
+Beyond the stock workload queries, the ``I*`` queries below are
+signature-stress stars: they require several *independently-irregular*
+predicates on one vertex (undergrads have no ``emailAddress``, only
+chairs carry ``headOf``, ~25% of grad students TA, ``rating2`` /
+``reviewerHomepage`` are probabilistic in the BSBM generator), which is
+exactly the structure vertex labels cannot prune but neighborhood
+signatures can.
+
+The returned dict is persisted as ``BENCH_index.json`` by run.py and
+gated by ``benchmarks.check`` (counts exact, per-query candidate
+reduction and geomean speedup within tolerance).
+"""
+
+from __future__ import annotations
+
+from repro.core import ExecOpts, SparqlEngine
+from repro.rdf.workloads import BSBM_QUERIES, LUBM_QUERIES
+
+from benchmarks.common import bench_query, bsbm, emit, lubm_typeaware
+
+INDEX_LUBM = {
+    # students with an email AND an advisor: every undergraduate fails the
+    # emailAddress bit, 80% also fail advisor — the signature kills them
+    # before the 3-spoke star is expanded
+    "I1": """SELECT ?x ?e ?a WHERE {
+        ?x rdf:type ub:Student .
+        ?x ub:memberOf ?d .
+        ?x ub:emailAddress ?e .
+        ?x ub:advisor ?a .
+        ?x ub:takesCourse ?c .
+    }""",
+    # faculty who head a department: ~1 chair per ~15 faculty carries the
+    # headOf out-bit
+    "I2": """SELECT ?x ?d WHERE {
+        ?x rdf:type ub:Faculty .
+        ?x ub:worksFor ?d .
+        ?x ub:headOf ?d2 .
+        ?x ub:doctoralDegreeFrom ?u .
+    }""",
+    # teaching assistants: ~25% of graduate students, 0% of undergraduates
+    "I3": """SELECT ?x ?c WHERE {
+        ?x rdf:type ub:Student .
+        ?x ub:memberOf ?d .
+        ?x ub:teachingAssistantOf ?c .
+        ?x ub:advisor ?a .
+        ?x ub:takesCourse ?c2 .
+    }""",
+}
+
+INDEX_BSBM = {
+    # reviews with BOTH optional predicates (rating2 ~60%, homepage ~30%)
+    "I4": """SELECT ?r ?p WHERE {
+        ?r rdf:type b:Review .
+        ?r b:reviewFor ?p .
+        ?r b:rating2 ?v .
+        ?r b:reviewerHomepage ?h .
+    }""",
+}
+
+LUBM_SET = ("Q2", "Q8", "Q9")
+BSBM_SET = ("B1", "B3", "B12")
+
+
+def _sum_stat(res, key: str) -> int:
+    total = 0
+    for br in res.stats.get("exec", {}).get("branches", []):
+        parts = [br.get("base") or {}] + list(br.get("optionals") or [])
+        for part in parts:
+            total += sum(x for x in part.get(key, ()) if x > 0)
+    return total
+
+
+def run(quick: bool = False) -> dict:
+    repeats = 3 if quick else 11
+    datasets = [
+        ("lubm", lubm_typeaware(1 if quick else 8, 0.6),
+         {**{n: LUBM_QUERIES[n] for n in LUBM_SET}, **INDEX_LUBM}),
+        ("bsbm", bsbm(400 if quick else 3000),
+         {**{n: BSBM_QUERIES[n] for n in BSBM_SET}, **INDEX_BSBM}),
+    ]
+    out: dict[str, dict] = {}
+    for ds_name, (g, maps), queries in datasets:
+        eng_off = SparqlEngine(g, maps, ExecOpts(use_prune=False))
+        eng_on = SparqlEngine(g, maps, ExecOpts())
+        for name, q in queries.items():
+            res_off, secs_off = bench_query(eng_off, q, repeats=repeats)
+            res_on, secs_on = bench_query(eng_on, q, repeats=repeats)
+            if res_off.count != res_on.count:
+                raise AssertionError(
+                    f"{ds_name}.{name}: prune-off count {res_off.count} != "
+                    f"prune-on count {res_on.count} (pruning must be sound)")
+            # candidate region = surviving rows per step (the binding
+            # table carried into each subsequent join); expansion rows
+            # entering a step's own filter are unavoidable work the probe
+            # runs inside of, so they don't count as candidates
+            cand_off = _sum_stat(res_off, "step_kept")
+            cand_on = _sum_stat(res_on, "step_kept")
+            pr_in = _sum_stat(res_on, "step_prune_in")
+            pr_out = _sum_stat(res_on, "step_prune_out")
+            reduction = cand_off / max(cand_on, 1)
+            speedup = secs_off / max(secs_on, 1e-12)
+            emit(f"index.{ds_name}.{name}.prune_off", secs_off,
+                 f"count={res_off.count};cands={cand_off}")
+            emit(f"index.{ds_name}.{name}.prune_on", secs_on,
+                 f"count={res_on.count};cands={cand_on};"
+                 f"reduction={reduction:.2f}x;speedup={speedup:.2f}x")
+            out[f"{ds_name}.{name}"] = {
+                "count": int(res_on.count),
+                "off_us": round(secs_off * 1e6, 1),
+                "on_us": round(secs_on * 1e6, 1),
+                "speedup": round(speedup, 3),
+                "cands_off": int(cand_off),
+                "cands_on": int(cand_on),
+                "cand_reduction": round(reduction, 3),
+                "probe_in": int(pr_in),
+                "probe_out": int(pr_out),
+            }
+    return out
+
+
+if __name__ == "__main__":
+    run()

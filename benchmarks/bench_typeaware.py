@@ -21,12 +21,11 @@ def run(quick: bool = False) -> dict:
     g_d, m_d = lubm_direct(scale, DENSITY)
     e_t = SparqlEngine(g_t, m_t, ExecOpts())
     e_d = SparqlEngine(g_d, m_d, ExecOpts())
-    gains = {}
+    out: dict[str, dict] = {}
     for name, q in sorted(LUBM_QUERIES.items()):
         res_d, sec_d = bench_query(e_d, q, repeats=3)
         res_t, sec_t = bench_query(e_t, q, repeats=3)
         gain = sec_d / max(sec_t, 1e-9)
-        gains[name] = gain
         # counts must agree for leaf-type queries; subsumption queries (Q5,
         # Q6, Q9, Q13, Q14 use superclasses) count MORE under type-aware
         # unless direct data materializes the closure — flag only shrinkage
@@ -34,7 +33,12 @@ def run(quick: bool = False) -> dict:
         emit(f"typeaware.table7.{name}.direct", sec_d, f"count={res_d.count}")
         emit(f"typeaware.table7.{name}.type_aware", sec_t,
              f"count={res_t.count};gain={gain:.2f}{flag}")
-    return gains
+        out[name] = {
+            "count_direct": int(res_d.count),
+            "count_typeaware": int(res_t.count),
+            "gain": round(gain, 3),
+        }
+    return out
 
 
 if __name__ == "__main__":

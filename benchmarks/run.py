@@ -22,7 +22,7 @@ import time
 
 
 SUITES = ["lubm", "typeaware", "opts", "parallel", "hetero", "bsbm",
-          "kernels", "exec", "archs", "serve", "planner", "store"]
+          "kernels", "exec", "archs", "serve", "planner", "store", "index"]
 
 # suites whose module name differs from the suite name
 SUITE_MODULES = {"store": "bench_update"}
@@ -30,7 +30,7 @@ SUITE_MODULES = {"store": "bench_update"}
 # suites whose run() return value is persisted as BENCH_<name>.json next to
 # this file (named after the module), giving future PRs a perf trajectory
 # to compare against
-SNAPSHOT_SUITES = {"planner", "exec", "store"}
+SNAPSHOT_SUITES = {"planner", "exec", "store", "index", "typeaware"}
 
 
 def main() -> None:

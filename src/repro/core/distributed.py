@@ -107,7 +107,7 @@ def run_sharded(executor: Executor, plan: ExecPlan, mesh,
     sarrs = executor._arrays(plan)
 
     def local(chunk_row, count_row):
-        _, _, _, count, ovf_step, _, _ = fn(
+        _, _, _, count, ovf_step, _, _, _, _ = fn(
             chunk_row[0], count_row[0],
             jnp.zeros((width, max(1, plan.n_pvars)), jnp.int32),
             jnp.zeros((width,), jnp.int32), sarrs)

@@ -105,17 +105,20 @@ class DeviceGraph:
                 self.base_vertices, self.n_elabels, self.max_log_deg)
 
     @staticmethod
-    def from_snapshot(snap, with_nlf: bool = False) -> "DeviceGraph":
+    def from_snapshot(snap, with_nlf: bool = False,
+                      with_prune: bool = False) -> "DeviceGraph":
         """Device view of a live-store snapshot: the base graph's arrays
         (cached on the base, shared by successive snapshots) plus
         snapshot-mode metadata.  Delta arrays are NOT uploaded here — they
         are per-plan step inputs (see ``Executor._snapshot_arrays``)."""
         import dataclasses
 
+        want = (bool(with_nlf), bool(with_prune))
         cache = getattr(snap.base, "_device_graph", None)
-        if cache is None or cache[0] != bool(with_nlf):
-            base_dg = DeviceGraph.from_graph(snap.base, with_nlf=with_nlf)
-            snap.base._device_graph = (bool(with_nlf), base_dg)
+        if cache is None or cache[0] != want:
+            base_dg = DeviceGraph.from_graph(snap.base, with_nlf=with_nlf,
+                                             with_prune=with_prune)
+            snap.base._device_graph = (want, base_dg)
         else:
             base_dg = cache[1]
         n_pad = _next_pow2(max(snap.n_vertices, 8))
@@ -131,7 +134,8 @@ class DeviceGraph:
         )
 
     @staticmethod
-    def from_graph(g: LabeledGraph, with_nlf: bool = False) -> "DeviceGraph":
+    def from_graph(g: LabeledGraph, with_nlf: bool = False,
+                   with_prune: bool = False) -> "DeviceGraph":
         def dev(x, dtype):
             x = np.asarray(x, dtype=dtype)
             if x.size == 0:
@@ -157,6 +161,16 @@ class DeviceGraph:
             nlf_o, nlf_i = g.nlf_bitmaps()
             arrays["nlf_out"] = dev(nlf_o, np.uint32)
             arrays["nlf_in"] = dev(nlf_i, np.uint32)
+        if with_prune:
+            from repro.index import get_index
+
+            sig = get_index(g).sig
+            arrays["sig"] = dev(sig, np.uint32)
+            # the fused expand/filter/compact kernel is width-generic in the
+            # bitmap, so composing the signature probe with the label filter
+            # is just a wider bitmap (labels ++ signature) and a combined mask
+            arrays["filter_bitmap"] = dev(
+                np.hstack([g.label_bitmap, sig]), np.uint32)
         max_deg = int(max(g.out.degree.max(initial=1), g.inc.degree.max(initial=1)))
         # one vectorized diff+reduce over the stacked [n_elabels, V+1] indptr
         mdo = (np.max(np.diff(g.out.indptr_el, axis=1), axis=1, initial=0)
@@ -200,11 +214,12 @@ class ExecOpts:
     async_chunks: int = 2  # chunk programs kept in flight before readback
     use_fused: bool = True  # fused expand/filter/compact kernel fast path
     cap_slack: float = 1.0  # schedule headroom (pow2 rounding adds ~1.5x already)
+    use_prune: bool = True  # neighborhood-signature pruning (repro.index)
     profile: bool = False  # per-step wall-time stats (adds host syncs)
 
     def key(self) -> tuple:
         return (self.semantics, self.use_int, self.use_nlf, self.use_deg,
-                self.int_tile, self.use_fused)
+                self.int_tile, self.use_fused, self.use_prune)
 
 
 @dataclass
@@ -230,7 +245,8 @@ def _label_mask(g: LabeledGraph, labels: tuple[int, ...]) -> np.ndarray:
     return mask
 
 
-def _plan_arrays(g: LabeledGraph, plan: ExecPlan) -> list[dict[str, jax.Array]]:
+def _plan_arrays(g: LabeledGraph, plan: ExecPlan,
+                 use_prune: bool = False) -> list[dict[str, jax.Array]]:
     """Per-step device constants: CSR indptr rows, label masks, etc."""
     out: list[dict[str, jax.Array]] = []
     flat_out = flat_in = None
@@ -248,6 +264,15 @@ def _plan_arrays(g: LabeledGraph, plan: ExecPlan) -> list[dict[str, jax.Array]]:
             d["iptr"] = jnp.asarray(dirn.indptr_el[s.elabel], dtype=jnp.int32)
         if s.labels:
             d["label_mask"] = jnp.asarray(_label_mask(g, s.labels))
+        if use_prune and s.sig_mask is not None \
+                and s.restart_candidates is None:
+            # restart steps carry pre-pruned candidate arrays; tree steps
+            # probe on device.  ``fmask`` = labels ++ signature drives the
+            # fused kernel's single combined superset test.
+            d["sig_mask"] = jnp.asarray(s.sig_mask)
+            lm = _label_mask(g, s.labels) if s.labels else \
+                np.zeros(g.label_bitmap.shape[1], np.uint32)
+            d["fmask"] = jnp.asarray(np.concatenate([lm, s.sig_mask]))
         if s.nlf_out_mask is not None:
             d["nlf_out_mask"] = jnp.asarray(s.nlf_out_mask)
             d["nlf_in_mask"] = jnp.asarray(s.nlf_in_mask)
@@ -399,9 +424,11 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
     compacted binding table is materialized for it and only scalars need to
     cross back to the host.
 
-    Returns ``(b, p, org, count, ovf_step, totals, kepts)`` where
-    ``totals``/``kepts`` hold each executed step's expansion total and
-    surviving-row count (``-1`` once frozen / not executed).
+    Returns ``(b, p, org, count, ovf_step, totals, kepts, pins, pouts)``
+    where ``totals``/``kepts`` hold each executed step's expansion total and
+    surviving-row count (``-1`` once frozen / not executed) and
+    ``pins``/``pouts`` the signature-prune probe's candidates in/out
+    (``-1`` when the step has no probe).
     """
     nq = plan.query.n_vertices
     npv = max(1, plan.n_pvars)
@@ -431,6 +458,8 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
         ovf_step = jnp.int32(n_steps)  # sentinel: completed
         totals: list[jax.Array] = []
         kepts: list[jax.Array] = []
+        pins: list[jax.Array] = []
+        pouts: list[jax.Array] = []
         cap_prev = n_in
         for si in range(start_step, stop):
             step = steps[si]
@@ -507,14 +536,28 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
 
             bitmap_src = (sarr.get("bitmap") if dmode
                           else dg.arrays["label_bitmap"])
+            p_in = p_out = None
             if _fused_eligible(step, opts) and not count_only and not merged:
-                label_mask = sarr.get("label_mask")
-                if label_mask is None:
-                    label_mask = jnp.zeros(
-                        (bitmap_src.shape[1],), jnp.uint32)
+                fmask = sarr.get("fmask")
+                fb_src = (sarr.get("filter_bitmap") if dmode
+                          else dg.arrays.get("filter_bitmap")) \
+                    if fmask is not None else None
+                if fmask is not None and fb_src is not None:
+                    # composed label + signature probe: one superset test
+                    # over the widened (labels ++ signature) bitmap
+                    filt_bitmap, filt_mask = fb_src, fmask
+                    p_in, p_out = total, None  # p_out = kept, set below
+                else:
+                    filt_bitmap = bitmap_src
+                    filt_mask = sarr.get("label_mask")
+                    if filt_mask is None:
+                        filt_mask = jnp.zeros(
+                            (bitmap_src.shape[1],), jnp.uint32)
                 v_out, row_sel, kept = kops.expand_filter_compact(
-                    nbr_src, bitmap_src, start, deg, offs,
-                    label_mask, jnp.int32(step.bound_id), cap)
+                    nbr_src, filt_bitmap, start, deg, offs,
+                    filt_mask, jnp.int32(step.bound_id), cap)
+                if p_in is not None:
+                    p_out = kept
                 # gather-based table build: when frozen, the identity index
                 # carries the old table through at zero extra cost
                 idg = jnp.where(
@@ -581,6 +624,15 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
                 if "label_mask" in sarr:
                     bm = bitmap_src[jnp.clip(v_new, 0, n - 1)]
                     ok &= kops.bitmap_superset(bm, sarr["label_mask"])
+                sig_mask = sarr.get("sig_mask")
+                sig_src = (sarr.get("sig") if dmode
+                           else dg.arrays.get("sig")) \
+                    if sig_mask is not None else None
+                if sig_src is not None:
+                    p_in = jnp.sum(ok.astype(jnp.int32))
+                    ok &= kops.signature_filter(
+                        sig_src, jnp.clip(v_new, 0, n - 1), sig_mask)
+                    p_out = jnp.sum(ok.astype(jnp.int32))
                 if (step.min_out_ntypes or step.min_in_ntypes) and not dmode:
                     # degree/NLF prunes use base-build summaries; they are
                     # not maintained across deltas, so snapshot execution
@@ -636,12 +688,20 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
 
             totals.append(jnp.where(active, total, jnp.int32(-1)))
             kepts.append(jnp.where(keep_new, count, jnp.int32(-1)))
+            if p_in is None:
+                pins.append(jnp.int32(-1))
+                pouts.append(jnp.int32(-1))
+            else:
+                pins.append(jnp.where(active, p_in, jnp.int32(-1)))
+                pouts.append(jnp.where(keep_new, p_out, jnp.int32(-1)))
             cap_prev = cap
 
         z = jnp.zeros(0, jnp.int32)
         return (b, p, org, count, ovf_step,
                 jnp.stack(totals) if totals else z,
-                jnp.stack(kepts) if kepts else z)
+                jnp.stack(kepts) if kepts else z,
+                jnp.stack(pins) if pins else z,
+                jnp.stack(pouts) if pouts else z)
 
     return fn
 
@@ -688,6 +748,8 @@ def _empty_stats(n_steps: int) -> dict[str, Any]:
         "step_rows": [0] * n_steps,
         "step_kept": [0] * n_steps,
         "step_retries": [0] * n_steps,
+        "step_prune_in": [0] * n_steps,
+        "step_prune_out": [0] * n_steps,
         "step_wall_ms": None,
         "caps": [],
         "chunks": 0,
@@ -737,6 +799,13 @@ def _annotate_step_spans(trace, plan: ExecPlan, dg: DeviceGraph, sarrs,
             "step": si, "kernel": kernel, "rows": expanded, "kept": kept,
             "retries": stats["step_retries"][si], "capacity": cap,
         }
+        if step.sig_mask is not None:
+            p_in = stats["step_prune_in"][si]
+            meta["prune_in"] = p_in
+            meta["prune_out"] = stats["step_prune_out"][si]
+            if p_in:
+                meta["prune_ratio"] = round(
+                    stats["step_prune_out"][si] / p_in, 4)
         if step.nontree:
             meta["nontree_checks"] = len(step.nontree)
         if estimate_step_ms is not None:
@@ -773,11 +842,13 @@ class Executor:
         if getattr(g, "is_snapshot", False):
             view = g
             self.graph = g.base
-            dg = DeviceGraph.from_snapshot(g, with_nlf=self.opts.use_nlf)
+            dg = DeviceGraph.from_snapshot(g, with_nlf=self.opts.use_nlf,
+                                           with_prune=self.opts.use_prune)
         else:
             view = None
             self.graph = g
-            dg = DeviceGraph.from_graph(g, with_nlf=self.opts.use_nlf)
+            dg = DeviceGraph.from_graph(g, with_nlf=self.opts.use_nlf,
+                                        with_prune=self.opts.use_prune)
         # (view, dg) swap together atomically (single tuple assignment), so
         # a query that pinned the pair mid-update stays internally
         # consistent; ``view``/``dg`` attributes mirror the latest state
@@ -811,8 +882,9 @@ class Executor:
             raise ValueError("snapshot has a different base graph; "
                              "build a new Executor")
         self._state = (snap,
-                       DeviceGraph.from_snapshot(snap,
-                                                 with_nlf=self.opts.use_nlf))
+                       DeviceGraph.from_snapshot(
+                           snap, with_nlf=self.opts.use_nlf,
+                           with_prune=self.opts.use_prune))
 
     def _get_fn(self, plan: ExecPlan, caps: tuple[int, ...], n_in: int,
                 table_input: bool, collect: str, start: int, stop: int,
@@ -850,11 +922,13 @@ class Executor:
             return self._snapshot_arrays(plan, view, dg)
         # cache on the plan object itself (an id()-keyed dict can collide
         # when a dead plan's id is recycled by the allocator)
+        use_prune = self.opts.use_prune
         cached = getattr(plan, "_dev_arrays", None)
-        if cached is not None and cached[0] is self.graph:
-            return cached[1]
-        arrs = _plan_arrays(self.graph, plan)
-        plan._dev_arrays = (self.graph, arrs)  # type: ignore[attr-defined]
+        if cached is not None and cached[0] is self.graph \
+                and cached[1] == use_prune:
+            return cached[2]
+        arrs = _plan_arrays(self.graph, plan, use_prune)
+        plan._dev_arrays = (self.graph, use_prune, arrs)  # type: ignore[attr-defined]
         return arrs
 
     def _snapshot_arrays(self, plan: ExecPlan, snap,
@@ -864,7 +938,8 @@ class Executor:
         and numeric column, and freshly resolved restart candidates."""
         from repro.core.planner.cost import CostModel
 
-        token = snap.token()
+        use_prune = self.opts.use_prune
+        token = (snap.token(), use_prune)
         cached = getattr(plan, "_dev_arrays_snap", None)
         if cached is not None and cached[0] == token:
             return cached[1]
@@ -885,6 +960,15 @@ class Executor:
             if s.restart_candidates is not None:
                 cands = np.sort(cm.candidates(plan.query, s.u)) \
                     .astype(np.int32)
+                if use_prune and s.sig_mask is not None and cands.size:
+                    # re-apply the plan's baked candidate prune to the
+                    # freshly resolved set (conservative snapshot rows)
+                    from repro.index import signature_rows
+
+                    rows = signature_rows(snap)
+                    keep = np.all((rows[cands] & s.sig_mask) == s.sig_mask,
+                                  axis=-1)
+                    cands = cands[keep]
                 n_real = cands.size
                 # pow2 padding keeps the trace stable across snapshots
                 target = _next_pow2(max(1, n_real))
@@ -905,6 +989,16 @@ class Executor:
                                                           s.labels))
             if s.labels or _fused_eligible(s, self.opts):
                 d["bitmap"] = snap.dev_bitmap(n_pad)
+            if use_prune and s.sig_mask is not None \
+                    and s.restart_candidates is None:
+                d["sig_mask"] = jnp.asarray(s.sig_mask)
+                d["sig"] = snap.dev_sig(n_pad)
+                if _fused_eligible(s, self.opts):
+                    lm = _label_mask(self.graph, s.labels) if s.labels else \
+                        np.zeros(self.graph.label_bitmap.shape[1], np.uint32)
+                    d["fmask"] = jnp.asarray(
+                        np.concatenate([lm, s.sig_mask]))
+                    d["filter_bitmap"] = snap.dev_filter_bitmap(n_pad)
             if s.num_filters:
                 nv = snap.dev_numeric(n_pad)
                 if nv is not None:
@@ -938,7 +1032,7 @@ class Executor:
         from repro.core.planner.cost import CostModel
         from repro.core.planner.ir import np_cmp
 
-        token = view.token()
+        token = (view.token(), self.opts.use_prune)
         cached = getattr(plan, "_snap_start", None)
         if cached is not None and cached[0] == token:
             return cached[1]
@@ -950,6 +1044,12 @@ class Executor:
             for op, c in nf:
                 keep &= np_cmp(vals, op, c)
             cands = cands[keep]
+        sig = getattr(plan, "start_sig", None)
+        if self.opts.use_prune and sig is not None and cands.size:
+            from repro.index import signature_rows
+
+            rows = signature_rows(view)
+            cands = cands[np.all((rows[cands] & sig) == sig, axis=-1)]
         cands = np.sort(cands).astype(np.int32)
         plan._snap_start = (token, cands)  # type: ignore[attr-defined]
         return cands
@@ -1027,7 +1127,11 @@ class Executor:
             start_cands = self._start_candidates(plan, view)
             n_src = start_cands.shape[0]
         if n_src == 0 or (not extension and not plan.steps):
-            return Result(0, _empty(plan), _empty_p(plan), np.zeros(0, np.int32))
+            # honor the collect contract even on the empty fast path —
+            # count-collect promises bindings=None (start pruning can make
+            # this reachable for plans that would otherwise produce rows)
+            return Result(0, _empty(plan) if collect == "bindings" else None,
+                          _empty_p(plan), np.zeros(0, np.int32))
 
         t_run0 = time.perf_counter()
         n_steps = len(plan.steps)
@@ -1081,22 +1185,29 @@ class Executor:
             return {"out": call_fn(fn, fresh, (*args, sarrs), chunk=ci),
                     "args": args, "caps": used, "offset": offset}
 
-        def accumulate(start: int, upto: int, acc_from: int, totals, kepts):
+        def accumulate(start: int, upto: int, acc_from: int, totals, kepts,
+                       pins, pouts):
             """Fold one window's step counters into the run stats."""
             if upto <= acc_from:
                 return
             t_np = np.asarray(totals)
             k_np = np.asarray(kepts)
+            pi_np = np.asarray(pins)
+            po_np = np.asarray(pouts)
             for si in range(max(start, acc_from), min(upto, n_steps)):
                 ii = si - start
                 if t_np[ii] >= 0:
                     stats["step_rows"][si] += int(t_np[ii])
                 if k_np[ii] >= 0:
                     stats["step_kept"][si] += int(k_np[ii])
+                if pi_np[ii] >= 0:
+                    stats["step_prune_in"][si] += int(pi_np[ii])
+                if po_np[ii] >= 0:
+                    stats["step_prune_out"][si] += int(po_np[ii])
 
         def drain(rec: dict) -> None:
             nonlocal total
-            b, p, org, count, ovf_step, totals, kepts = rec["out"]
+            b, p, org, count, ovf_step, totals, kepts, pins, pouts = rec["out"]
             used = list(rec["caps"])
             start = 0
             acc_from = 0
@@ -1108,7 +1219,7 @@ class Executor:
                 else:
                     with trace.span("device_wait"):
                         ovf = int(ovf_step)
-                accumulate(start, ovf, acc_from, totals, kepts)
+                accumulate(start, ovf, acc_from, totals, kepts, pins, pouts)
                 acc_from = max(acc_from, min(ovf, n_steps))
                 if ovf >= n_steps:
                     break
@@ -1121,7 +1232,8 @@ class Executor:
                     n_in = used[ovf - 1] if ovf > 0 else chunk_size
                     fn, fresh = self._get_fn(plan, tuple(new_caps), n_in,
                                              True, collect, ovf, n_steps, dg)
-                    b, p, org, count, ovf_step, totals, kepts = call_fn(
+                    (b, p, org, count, ovf_step, totals, kepts, pins,
+                     pouts) = call_fn(
                         fn, fresh,
                         (b[:n_in], count, p[:n_in], org[:n_in], sarrs),
                         resume_step=ovf)
@@ -1138,7 +1250,8 @@ class Executor:
                     fn, fresh = self._get_fn(plan, tuple(new_caps),
                                              chunk_size, extension, collect,
                                              0, n_steps, dg)
-                    b, p, org, count, ovf_step, totals, kepts = call_fn(
+                    (b, p, org, count, ovf_step, totals, kepts, pins,
+                     pouts) = call_fn(
                         fn, fresh, (*rec["args"], sarrs), retry=True)
                     start = 0
                 used = new_caps
@@ -1225,12 +1338,16 @@ class Executor:
                 if span_cm is not None:
                     span_cm.__exit__(None, None, None)
                 stats["step_wall_ms"][si] += (time.perf_counter() - t0) * 1e3
-                b, p, org, count, ovf_step, totals, kepts = out
+                b, p, org, count, ovf_step, totals, kepts, pins, pouts = out
                 if int(ovf_step) >= n_steps:
                     if int(totals[0]) >= 0:
                         stats["step_rows"][si] += int(totals[0])
                     if int(kepts[0]) >= 0:
                         stats["step_kept"][si] += int(kepts[0])
+                    if int(pins[0]) >= 0:
+                        stats["step_prune_in"][si] += int(pins[0])
+                    if int(pouts[0]) >= 0:
+                        stats["step_prune_out"][si] += int(pouts[0])
                     state = (b, p, org, count)
                     break
                 stats["step_retries"][si] += 1
@@ -1240,6 +1357,8 @@ class Executor:
         # counter vectors mean "already accumulated above")
         b, p, org, count = state
         rec = {"out": (b, p, org, count, jnp.int32(n_steps),
+                       jnp.full(n_steps, -1, jnp.int32),
+                       jnp.full(n_steps, -1, jnp.int32),
                        jnp.full(n_steps, -1, jnp.int32),
                        jnp.full(n_steps, -1, jnp.int32)),
                "args": args, "caps": tuple(caps), "offset": offset}

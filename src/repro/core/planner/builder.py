@@ -43,6 +43,7 @@ from repro.core.planner.ir import (ExecPlan, NTCheck, OrderNotExecutable,
 from repro.core.planner.order import (DP_MAX_VERTICES, dp_order, greedy_order,
                                       pvar_first_order, sampled_order)
 from repro.core.query import QueryGraph
+from repro.index import get_index, prune_candidates, required_signature
 from repro.rdf.graph import LabeledGraph
 from repro.utils import get_logger
 
@@ -60,6 +61,7 @@ def build_plan(
     optional_groups: dict[int, int] | None = None,
     use_nlf: bool = False,
     use_deg: bool = False,
+    use_sig: bool = True,
     prebound: int = 0,
     prebound_pvars: int = 0,
     force_order: list[int] | None = None,
@@ -72,7 +74,9 @@ def build_plan(
     ≤ 8 free vertices, greedy fallback).  ``prebound`` > 0 switches to
     extension mode: vertices below it are pre-bound base columns and the
     plan only binds the rest (OPTIONAL left joins).  ``use_nlf`` /
-    ``use_deg`` correspond to the paper's -NLF / -DEG toggles.
+    ``use_deg`` correspond to the paper's -NLF / -DEG toggles; ``use_sig``
+    enables neighborhood-signature pruning (:mod:`repro.index`) of start
+    and restart candidates plus per-step ``sig_mask`` probes.
     """
     if estimate not in ESTIMATE_MODES:
         raise PlanError(f"unknown estimate mode {estimate!r}; "
@@ -87,13 +91,17 @@ def build_plan(
         raise PlanError("empty query")
     cm = CostModel(g)
 
+    sig_bits = get_index(g).n_bits if use_sig else None
+
     def attempt(pvar_first: bool) -> ExecPlan:
         if prebound:
             return _build_extension(g, cm, q, prebound, prebound_pvars,
                                     estimate, num_filters, optional_groups,
-                                    use_nlf, use_deg, force_order, pvar_first)
+                                    use_nlf, use_deg, sig_bits, force_order,
+                                    pvar_first)
         return _build_base(g, cm, q, estimate, num_filters, optional_groups,
-                           use_nlf, use_deg, force_order, pvar_first)
+                           use_nlf, use_deg, sig_bits, force_order,
+                           pvar_first)
 
     try:
         plan = attempt(pvar_first=False)
@@ -113,7 +121,7 @@ def build_plan(
 
 
 def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
-                optional_groups, use_nlf, use_deg, force_order,
+                optional_groups, use_nlf, use_deg, sig_bits, force_order,
                 pvar_first: bool = False) -> ExecPlan:
     comps = q.connected_components()
     adj = q.adjacency()
@@ -150,6 +158,7 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
     est_expand: list[float] = []
     est_rows: list[float] = []
     rows = 1.0
+    start_sig = None
     bound_pvars: dict[int, int] = {}  # pvar idx -> order position bound
 
     for rank_pos, ci in enumerate(comp_rank):
@@ -160,15 +169,24 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
             _, _, mo, mi = _nlf_masks(g, q, s)
             keep = (g.out.degree[cands] >= mo) & (g.inc.degree[cands] >= mi)
             cands = cands[keep]
+        s_sig = None
+        if sig_bits is not None:
+            s_sig = required_signature(sig_bits, q, s, optional_groups)
+            if s_sig.any():
+                cands = prune_candidates(g, q, s, cands, optional_groups)
+            else:
+                s_sig = None
         if rank_pos == 0:
             start_candidates = cands
+            start_sig = s_sig
             rows = float(max(1, cands.shape[0]))
         else:
             steps.append(Step(u=s, parent=-1, elabel=-1, forward=True,
                               labels=q.vertices[s].labels,
                               bound_id=max(q.vertices[s].bound_id, -1),
                               optional_group=optional_groups.get(s, -1),
-                              restart_candidates=cands))
+                              restart_candidates=cands,
+                              sig_mask=s_sig))
             est_fanout.append(float(max(1, cands.shape[0])))
             est_expand.append(float(max(1, cands.shape[0])))
             rows *= float(max(1, cands.shape[0]))
@@ -213,7 +231,7 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
         for w in order[1:]:
             step, f_card, f_raw = _emit_vertex_step(
                 g, cm, q, w, placed, adj, edge_used, num_filters,
-                optional_groups, use_nlf, use_deg, bound_pvars,
+                optional_groups, use_nlf, use_deg, sig_bits, bound_pvars,
                 pos=len(global_order))
             steps.append(step)
             f_presize = sampled_fanout.get(w)
@@ -251,6 +269,7 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
         order=global_order,
         n_pvars=len(q.pvars),
         start_num_filters=start_nf,
+        start_sig=start_sig,
         est_fanout=est_fanout,
         est_expand=est_expand,
         est_rows=est_rows,
@@ -265,8 +284,8 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
 
 def _build_extension(g, cm: CostModel, q: QueryGraph, prebound: int,
                      prebound_pvars: int, estimate, num_filters,
-                     optional_groups, use_nlf, use_deg, force_order,
-                     pvar_first: bool = False) -> ExecPlan:
+                     optional_groups, use_nlf, use_deg, sig_bits,
+                     force_order, pvar_first: bool = False) -> ExecPlan:
     adj = q.adjacency()
     seeds = set(range(prebound))
     targets = [v for v in range(q.n_vertices) if v >= prebound]
@@ -309,7 +328,7 @@ def _build_extension(g, cm: CostModel, q: QueryGraph, prebound: int,
     for w in order:
         step, f_card, f_raw = _emit_vertex_step(
             g, cm, q, w, placed, adj, edge_used, num_filters,
-            optional_groups, use_nlf, use_deg, bound_pvars,
+            optional_groups, use_nlf, use_deg, sig_bits, bound_pvars,
             pos=len(global_order))
         steps.append(step)
         est_fanout.append(f_card)
@@ -343,7 +362,7 @@ def _build_extension(g, cm: CostModel, q: QueryGraph, prebound: int,
 
 def _emit_vertex_step(g, cm: CostModel, q: QueryGraph, w: int, placed: set[int],
                       adj, edge_used: list[bool], num_filters,
-                      optional_groups, use_nlf, use_deg,
+                      optional_groups, use_nlf, use_deg, sig_bits,
                       bound_pvars: dict[int, int],
                       pos: int) -> tuple[Step, float, float]:
     """Emit the expansion step binding ``w`` from the placed set: cheapest
@@ -403,6 +422,21 @@ def _emit_vertex_step(g, cm: CostModel, q: QueryGraph, w: int, placed: set[int],
                                pvar_idx=_pvar_idx(q, e2)))
     om, im, mo, mi = _nlf_masks(g, q, w)
     qv = q.vertices[w]
+    sig_mask = None
+    if sig_bits is not None and qv.bound_id < 0:
+        req = required_signature(sig_bits, q, w, optional_groups)
+        if req.any() and e.elabel >= 0:
+            # the tree edge itself already guarantees one bit of the
+            # required signature (forward expansion: w has an incoming
+            # e.elabel edge; backward: an outgoing one) — a probe whose
+            # mask holds nothing *beyond* that bit is pure overhead
+            probe = req.copy()
+            t = e.elabel % sig_bits
+            off = ((sig_bits + 31) // 32) if forward else 0
+            probe[off + (t >> 5)] &= ~np.uint32(1 << (t & 31))
+            if not probe.any():
+                req = None
+        sig_mask = req if req is not None and req.any() else None
     step = Step(
         u=w,
         parent=parent,
@@ -418,6 +452,7 @@ def _emit_vertex_step(g, cm: CostModel, q: QueryGraph, w: int, placed: set[int],
         nlf_in_mask=im if use_nlf else None,
         num_filters=tuple(num_filters.get(qv.var or "", ())),
         optional_group=optional_groups.get(w, -1),
+        sig_mask=sig_mask,
     )
     return step, f_card, f_raw
 

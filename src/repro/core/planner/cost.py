@@ -12,6 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.query import QueryGraph
+from repro.index import get_summary
 from repro.rdf.graph import LabeledGraph
 from repro.stats import GraphStats, get_stats
 
@@ -20,6 +21,8 @@ from repro.stats import GraphStats, get_stats
 _BOUND_SELECTIVITY = 0.05
 _LABEL_SELECTIVITY_FLOOR = 0.01
 
+_UNSET = object()
+
 
 class CostModel:
     """Fanout / frequency / candidate estimates for one (graph, stats) pair."""
@@ -27,6 +30,15 @@ class CostModel:
     def __init__(self, g: LabeledGraph, stats: GraphStats | None = None):
         self.g = g
         self.stats = stats if stats is not None else get_stats(g)
+        self._summary = _UNSET
+
+    @property
+    def summary(self):
+        """The graph's (class, predicate, class) summary — lazily resolved
+        because most CostModel uses never reach edge_cost."""
+        if self._summary is _UNSET:
+            self._summary = get_summary(self.g)
+        return self._summary
 
     # ---------------------------------------------------------- vertex side
     def vertex_freq(self, q: QueryGraph, u: int) -> float:
@@ -82,8 +94,12 @@ class CostModel:
     # ------------------------------------------------------------ edge side
     def edge_cost(self, q: QueryGraph, ei: int, parent: int) -> float:
         """Expected rows per input row when expanding edge ``ei`` away from
-        ``parent`` — average (predicate, direction) fanout discounted by the
-        child's label selectivity / ID binding."""
+        ``parent``.  When both endpoints carry labels and the graph has a
+        summary (:mod:`repro.index.summary`), the per-(class, predicate,
+        class) edge count over the parent class's population is the
+        estimate — real join selectivity instead of the global
+        label-frequency discount; otherwise the average (predicate,
+        direction) fanout discounted by the child's label selectivity."""
         e = q.edges[ei]
         forward = e.u == parent
         child = e.v if forward else e.u
@@ -92,8 +108,15 @@ class CostModel:
         if qv.bound_id >= 0:
             est = min(est, _BOUND_SELECTIVITY)
         elif qv.labels:
-            est *= max(_LABEL_SELECTIVITY_FLOOR,
-                       self.stats.label_selectivity(qv.labels) * 4.0)
+            sel = None
+            if self.summary is not None:
+                sel = self.summary.est_fanout(
+                    e.elabel, forward, q.vertices[parent].labels, qv.labels)
+            if sel is not None:
+                est = max(sel, 1e-4)
+            else:
+                est *= max(_LABEL_SELECTIVITY_FLOOR,
+                           self.stats.label_selectivity(qv.labels) * 4.0)
         return est
 
     def choose_start_vertex(self, q: QueryGraph, component: list[int]) -> int:

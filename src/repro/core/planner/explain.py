@@ -48,6 +48,8 @@ def explain_plan(plan: ExecPlan, maps=None) -> dict:
             rec["predicate"] = "?" + q.pvars[s.pvar_idx]
         if s.nontree:
             rec["nontree_checks"] = len(s.nontree)
+        if s.sig_mask is not None:
+            rec["sig_probe"] = True
         if s.optional_group >= 0:
             rec["optional_group"] = s.optional_group
         if s.restart_candidates is not None:

@@ -61,6 +61,11 @@ class Step:
     optional_group: int = -1  # -1 = required pattern
     # restart steps expand the table by this component's start candidates
     restart_candidates: np.ndarray | None = None
+    # required neighborhood signature (repro.index; uint32 [2W]) — tree
+    # steps probe it in the executor step loop, restart steps re-apply it
+    # when snapshot execution re-resolves their candidates.  Derived from
+    # plan structure + graph, so (like the NLF masks) not in signature().
+    sig_mask: np.ndarray | None = None
 
 
 @dataclass
@@ -76,6 +81,10 @@ class ExecPlan:
     # kept as a *spec* so snapshot execution (live store) can re-resolve
     # the candidate set against a newer graph version than the plan's
     start_num_filters: tuple = ()
+    # start-vertex required signature — the snapshot re-resolution spec,
+    # exactly like ``start_num_filters`` (the baked candidate array already
+    # has it applied)
+    start_sig: np.ndarray | None = None
     # estimated fanout per step (for capacity presizing)
     est_fanout: list[float] = field(default_factory=list)
     # raw per-step expansion factor (candidates produced per input row

@@ -423,7 +423,8 @@ class SparqlEngine:
         cheap, expensive = _split_filters(g.filters, q)
         plan = build_plan(self.graph, q, estimate=self.estimate,
                           num_filters=cheap,
-                          use_nlf=self.opts.use_nlf, use_deg=self.opts.use_deg)
+                          use_nlf=self.opts.use_nlf, use_deg=self.opts.use_deg,
+                          use_sig=self.opts.use_prune)
         q_all = q
         optionals: list[CompiledOptional] = []
         for og in g.optionals:
@@ -437,6 +438,7 @@ class SparqlEngine:
                                   num_filters=cheap_o,
                                   use_nlf=self.opts.use_nlf,
                                   use_deg=self.opts.use_deg,
+                                  use_sig=self.opts.use_prune,
                                   prebound=base_cols,
                                   prebound_pvars=n_base_pvars)
             optionals.append(CompiledOptional(q_ext, base_cols, ext_plan, exp_o))
@@ -592,10 +594,14 @@ def _annotate_steps(plan_desc: dict, exec_stats: dict | None) -> None:
     for i, rec in enumerate(plan_desc.get("steps", [])):
         for src, dst in (("step_rows", "actual_expanded"),
                          ("step_kept", "actual_rows"),
-                         ("step_retries", "retries")):
+                         ("step_retries", "retries"),
+                         ("step_prune_in", "prune_in"),
+                         ("step_prune_out", "prune_out")):
             vals = exec_stats.get(src)
             if vals is not None and i < len(vals):
                 rec[dst] = int(vals[i])
+        if rec.get("prune_in"):
+            rec["prune_ratio"] = round(rec["prune_out"] / rec["prune_in"], 4)
         wall = exec_stats.get("step_wall_ms")
         if wall is not None and i < len(wall):
             rec["wall_ms"] = round(float(wall[i]), 3)

@@ -1,0 +1,33 @@
+"""repro.index — neighborhood-signature & summary-graph pruning subsystem.
+
+Two pre-expansion pruning structures in the spirit of TurboHOM++'s
+candidate-region exploration and Gai et al.'s summary-graph-driven method:
+
+- :class:`~repro.index.signature.SignatureIndex`: per-vertex packed uint32
+  bitmaps of incident predicates per direction (hash-folded superset
+  probes, same contract as :mod:`repro.kernels.bitmap_filter`).  A query
+  vertex's *required signature* (predicates its data match must have) is
+  tested against the index to prune start candidates in the planner and
+  expansion frontiers in the executor step loop.
+- :class:`~repro.index.summary.SummaryGraph`: a coarse graph over vertex
+  classes with per-(class, predicate, class) edge counts; the planner's
+  :class:`~repro.core.planner.cost.CostModel` consults it for join
+  selectivities instead of the label-frequency heuristic.
+
+Both are built once per :class:`~repro.rdf.graph.LabeledGraph` (cached on
+the graph), over-approximated conservatively on live-store snapshots
+(insert bits OR-ed in, tombstones ignored — pruning stays sound), and
+patched *exactly* at :meth:`VersionedStore.compact` (asserted against a
+rebuild in tests, the same contract as ``GraphStats``).
+"""
+
+from repro.index.signature import (SignatureIndex, get_index, patch_index,
+                                   prune_candidates, required_signature,
+                                   signature_rows)
+from repro.index.summary import (SummaryGraph, get_summary, patch_summary)
+
+__all__ = [
+    "SignatureIndex", "get_index", "patch_index", "prune_candidates",
+    "required_signature", "signature_rows",
+    "SummaryGraph", "get_summary", "patch_summary",
+]

@@ -66,6 +66,21 @@ def bitmap_superset(bitmap, required):
     return _ref.bitmap_superset_ref(bitmap, required)
 
 
+def signature_filter(sig, v, required):
+    """Neighborhood-signature prune probe: gather candidate rows from the
+    resident signature table and superset-test them against the query
+    vertex's required signature.  See
+    :func:`repro.kernels.ref.signature_filter_ref` for semantics."""
+    if _use_pallas():
+        from repro.kernels import signature_filter as _sf
+
+        if (sig.size <= _sf.VMEM_SIG_BOUND
+                and v.shape[0] <= _sf.VMEM_ROWS_BOUND):
+            return _sf.signature_filter_pallas(sig, v, required,
+                                               interpret=_interpret())
+    return _ref.signature_filter_ref(sig, v, required)
+
+
 def segment_gather_sum(table, indices, segments, num_segments, weights=None):
     if _use_pallas():
         from repro.kernels.segment_gather import segment_gather_sum_pallas

@@ -65,6 +65,21 @@ def bitmap_superset_ref(bitmap: jax.Array, required: jax.Array) -> jax.Array:
     return jnp.all((bitmap & req) == req, axis=-1)
 
 
+def signature_filter_ref(sig: jax.Array, v: jax.Array,
+                         required: jax.Array) -> jax.Array:
+    """Gather-then-superset probe on the neighborhood-signature index.
+
+    sig: uint32 [V, 2W] per-vertex folded predicate signatures
+    v: int32 [B] candidate vertex ids (out-of-range ids clip; callers mask
+       invalid rows separately)
+    required: uint32 [2W] the query vertex's required signature
+    returns bool [B]: candidate's signature is a superset of required.
+    """
+    rows = jnp.take(sig, jnp.clip(v, 0, sig.shape[0] - 1), axis=0)
+    req = required[None, :]
+    return jnp.all((rows & req) == req, axis=-1)
+
+
 def segment_gather_sum_ref(
     table: jax.Array,  # [V, D] embedding rows / node features
     indices: jax.Array,  # int32 [E] gather ids

@@ -1,0 +1,59 @@
+"""Neighborhood-signature prune kernel: fused gather + superset probe.
+
+Candidate pruning tests each frontier vertex's folded predicate signature
+(:mod:`repro.index.signature`) against the query vertex's required
+signature.  Unlike :mod:`repro.kernels.bitmap_filter` — whose rows are
+already gathered — the signature table stays resident in VMEM and the
+kernel gathers rows by candidate id itself, so the probe composes with
+the executor step loop without materializing a [B, 2W] gather first.
+
+sig: uint32 [V, 2W], v: int32 [B], required: uint32 [2W] → bool [B].
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# whole-array VMEM residency bounds (uint32 words / candidate rows)
+VMEM_SIG_BOUND = 1 << 20
+VMEM_ROWS_BOUND = 1 << 19
+
+
+def _kernel(sig_ref, v_ref, req_ref, o_ref):
+    sig = sig_ref[...]  # [V, 2W] resident table
+    v = jnp.clip(v_ref[...], 0, sig.shape[0] - 1)  # [T]
+    rows = jnp.take(sig, v, axis=0)  # [T, 2W]
+    req = req_ref[...]  # [1, 2W]
+    o_ref[...] = jnp.all((rows & req) == req, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("interpret", "tile"))
+def signature_filter_pallas(
+    sig: jax.Array, v: jax.Array, required: jax.Array, *,
+    interpret: bool = False, tile: int = 1024
+) -> jax.Array:
+    b = v.shape[0]
+    nv, w = sig.shape
+    t = min(tile, max(1, b))
+    pad = (-b) % t
+    if pad:
+        v = jnp.pad(v, (0, pad))
+    bp = v.shape[0]
+    req2 = required.reshape(1, w)
+    out = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.bool_),
+        grid=(bp // t,),
+        in_specs=[
+            pl.BlockSpec((nv, w), lambda i: (0, 0)),
+            pl.BlockSpec((t,), lambda i: (i,)),
+            pl.BlockSpec((1, w), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t,), lambda i: (i,)),
+        interpret=interpret,
+    )(sig, v, req2)
+    return out[:b]

@@ -321,6 +321,12 @@ class ServeMetrics:
         self.exec_retries = r.counter(
             "repro_exec_step_retries_total",
             "executor capacity overflows (suffix-resume re-entries)")
+        self.prune_candidates_in = r.counter(
+            "repro_prune_candidates_in_total",
+            "expansion candidates entering neighborhood-signature probes")
+        self.prune_candidates_out = r.counter(
+            "repro_prune_candidates_out_total",
+            "expansion candidates surviving neighborhood-signature probes")
         self.updates = r.counter(
             "repro_updates_total", "SPARQL UPDATE requests by dataset/status")
         self.update_triples = r.counter(

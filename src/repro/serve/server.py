@@ -248,6 +248,11 @@ class DatasetRegistry:
         retries = sum(sum(part.get("step_retries", ())) for part in parts)
         if retries:
             self.metrics.exec_retries.inc(retries)
+        prune_in = sum(sum(part.get("step_prune_in", ())) for part in parts)
+        if prune_in:
+            self.metrics.prune_candidates_in.inc(prune_in)
+            self.metrics.prune_candidates_out.inc(
+                sum(sum(part.get("step_prune_out", ())) for part in parts))
         compiles = sum(part.get("compiles", 0) for part in parts)
         if compiles:
             self.metrics.compile_events.inc(compiles)

@@ -347,6 +347,41 @@ class Snapshot:
 
         return self._dev_cached(("bitmap", n_pad), build)
 
+    def dev_sig(self, n_pad: int):
+        """Padded per-vertex neighborhood-signature rows (conservative
+        overlay: insert bits OR-ed onto the base index, tombstones
+        ignored — see :func:`repro.index.signature_rows`)."""
+        import jax.numpy as jnp
+
+        def build():
+            from repro.index import signature_rows
+
+            sig = signature_rows(self)
+            if sig.shape[0] < n_pad:
+                sig = np.vstack([sig, np.zeros((n_pad - sig.shape[0],
+                                                sig.shape[1]), np.uint32)])
+            return jnp.asarray(sig)
+
+        return self._dev_cached(("sig", n_pad), build)
+
+    def dev_filter_bitmap(self, n_pad: int):
+        """Padded (labels ++ signature) rows for the fused kernel's
+        combined superset probe."""
+        import jax.numpy as jnp
+
+        def build():
+            from repro.index import signature_rows
+
+            bm = self.label_bitmap
+            sig = signature_rows(self)
+            rows = max(bm.shape[0], sig.shape[0], n_pad)
+            wide = np.zeros((rows, bm.shape[1] + sig.shape[1]), np.uint32)
+            wide[:bm.shape[0], :bm.shape[1]] = bm
+            wide[:sig.shape[0], bm.shape[1]:] = sig
+            return jnp.asarray(wide)
+
+        return self._dev_cached(("filter_bitmap", n_pad), build)
+
     def dev_numeric(self, n_pad: int):
         import jax.numpy as jnp
 
@@ -771,6 +806,23 @@ class VersionedStore:
             if old_stats is not None:
                 new_g._graph_stats = patch_stats(
                     old_stats, new_g, ins=ins, tombs=tombs,
+                    label_changes=label_changes)
+            # repro.index maintenance: snapshots ran on conservative
+            # overlays; compaction restores *exact* structures by patching
+            # only the touched rows / count cells (same contract as
+            # GraphStats — asserted against a rebuild in tests)
+            old_sig = getattr(base, "_sig_index", None)
+            if old_sig is not None:
+                from repro.index import patch_index
+
+                new_g._sig_index = patch_index(old_sig, new_g,
+                                               ins=ins, tombs=tombs)
+            old_sum = getattr(base, "_summary_graph", None)
+            if old_sum is not None:
+                from repro.index import patch_summary
+
+                new_g._summary_graph = patch_summary(
+                    old_sum, new_g, ins=ins, tombs=tombs,
                     label_changes=label_changes)
             log.info("compacted store: %d vertices, %d edges (delta was %d)",
                      new_g.n_vertices, new_g.n_edges, len(self._delta))

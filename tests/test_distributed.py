@@ -15,6 +15,12 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# Both xfails below are deterministic jax 0.4.x lowering artifacts (see each
+# marker's reason).  Conditioning on the exact version line + strict=True
+# means they must fail on 0.4.x and must pass the moment the image moves to
+# jax>=0.5 — a rotted marker shows up as XPASS-strict instead of hiding.
+_JAX_04 = __import__("jax").__version__.startswith("0.4.")
+
 
 def run_script(body: str, devices: int = 8, timeout: int = 420) -> str:
     script = (
@@ -67,8 +73,8 @@ def test_sharded_engine_matches_host():
            "0.59% relative gap, 36x the 1e-3 tolerance, with "
            "compute_dtype=float32, so this is a real lowering difference "
            "and not reduction-order noise; do NOT widen the tolerance to "
-           "mask it.  Passes on jax>=0.5; drop this marker when the image "
-           "moves past 0.4.x.", strict=False)
+           "mask it.  Passes on jax>=0.5.",
+    condition=_JAX_04, strict=True)
 def test_dp_tp_train_step_matches_single_device():
     out = run_script("""
         import dataclasses, jax, numpy as np, jax.numpy as jnp
@@ -119,7 +125,7 @@ def test_dp_tp_train_step_matches_single_device():
            "(ShapedArray(float32[]) fails rep inference).  No cheap 0.4.x "
            "workaround: it would need pipelined_loss to prove replication "
            "via an explicit collective on every output.  Needs jax>=0.5.",
-    strict=False)
+    condition=_JAX_04, strict=True)
 def test_pipeline_parallel_matches_dense():
     out = run_script("""
         import dataclasses, jax, numpy as np, jax.numpy as jnp

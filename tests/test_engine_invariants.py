@@ -90,7 +90,9 @@ def test_engine_chunk_step_matches_executor():
         q.vertices.append(QVertex(f"v{i}", labels=(0,)))
         q.var_to_vertex[f"v{i}"] = i
     q.edges = [QEdge(0, 1, 0), QEdge(1, 2, 0), QEdge(2, 3, 0)]
-    plan = build_plan(g, q, estimate="static")
+    # pin the forward-path order: engine_chunk_step IS that shape, and the
+    # cost model is free to pick another (equally correct) order otherwise
+    plan = build_plan(g, q, estimate="static", force_order=[0, 1, 2, 3])
     host = Executor(g, ExecOpts()).run(plan, collect="count").count
 
     iptr = jnp.asarray(

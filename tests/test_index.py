@@ -1,0 +1,354 @@
+"""repro.index tests: signature/summary construction, pruning soundness
+(prune-on == prune-off, including across live-store update streams and
+compaction), and the incremental-maintenance exactness contract
+(patched index/summary bit-identical to a from-scratch rebuild)."""
+
+import numpy as np
+import pytest
+
+from conftest import given, random_labeled_graph, random_query_graph, settings, st
+
+from repro.core import ExecOpts, Executor, SparqlEngine, build_plan
+from repro.index import (SignatureIndex, get_index, get_summary, patch_index,
+                         patch_summary, prune_candidates, required_signature,
+                         signature_rows)
+from repro.index.signature import sig_bits
+from repro.index.summary import SummaryGraph, primary_classes
+from repro.rdf.workloads import LUBM_QUERIES
+from repro.store.versioned import VersionedStore
+
+
+# --------------------------------------------------------------------------
+# signature construction
+# --------------------------------------------------------------------------
+
+
+def _brute_sig(g, v, n_bits):
+    w = (n_bits + 31) // 32
+    row = np.zeros(2 * w, np.uint32)
+    for d, off in ((g.out, 0), (g.inc, w)):
+        for el in d.lab_all[d.indptr_all[v]:d.indptr_all[v + 1]]:
+            t = int(el) % n_bits
+            row[off + (t >> 5)] |= np.uint32(1 << (t & 31))
+    return row
+
+
+def _check_sig_build(seed):
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(rng, n_vertices=12, n_elabels=5, p_edge=0.3)
+    idx = get_index(g)
+    assert idx.n_bits == sig_bits(g.n_elabels)
+    for v in range(g.n_vertices):
+        np.testing.assert_array_equal(idx.sig[v], _brute_sig(g, v, idx.n_bits))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_signature_build_matches_brute_force(seed):
+    _check_sig_build(seed * 7919 + 5)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_signature_build_matches_brute_force_property(seed):
+    _check_sig_build(seed)
+
+
+def test_signature_fold_width_bounded():
+    rng = np.random.default_rng(0)
+    g = random_labeled_graph(rng, n_vertices=8, n_elabels=4, p_edge=0.4)
+    idx = get_index(g)
+    assert idx.sig.shape == (8, 2 * ((idx.n_bits + 31) // 32))
+    assert get_index(g) is idx  # cached on the graph
+
+
+def test_prune_candidates_sound_superset():
+    """Every vertex that actually matches the query vertex survives."""
+    rng = np.random.default_rng(7)
+    g = random_labeled_graph(rng, n_vertices=15, n_elabels=4, p_edge=0.35)
+    q = random_query_graph(rng, g, n_qv=3, with_id=False)
+    from repro.core.reference import enumerate_matches
+
+    matches = enumerate_matches(g, q)
+    for u in range(q.n_vertices):
+        valid = {m[0][u] for m in matches}
+        cands = np.arange(g.n_vertices, dtype=np.int32)
+        kept = set(prune_candidates(g, q, u, cands).tolist())
+        assert valid <= kept
+
+
+def test_required_signature_skips_other_optional_groups():
+    """Edges into a different optional group are not required (left join)."""
+    rng = np.random.default_rng(3)
+    g = random_labeled_graph(rng, n_vertices=8, n_elabels=6, p_edge=0.3)
+    q = random_query_graph(rng, g, n_qv=3, with_id=False, p_extra_edge=0.0)
+    n_bits = sig_bits(g.n_elabels)
+    full = required_signature(n_bits, q, 0)
+    # push every other vertex into a foreign optional group: only
+    # self-incident requirements may remain
+    groups = {v: 1 for v in range(1, q.n_vertices)}
+    relaxed = required_signature(n_bits, q, 0, groups)
+    assert np.all((full & relaxed) == relaxed)  # relaxed ⊆ full
+    # edges inside u's own group still count
+    groups0 = dict(groups)
+    groups0[0] = 1
+    assert np.array_equal(required_signature(n_bits, q, 0, groups0), full)
+
+
+# --------------------------------------------------------------------------
+# pruning never drops a valid match (the core soundness property)
+# --------------------------------------------------------------------------
+
+
+def _solutions(g, opts, q):
+    plan = build_plan(g, q, estimate="static", use_sig=opts.use_prune)
+    res = Executor(g, opts).run(plan)
+    return sorted(map(tuple, res.bindings.tolist()))
+
+
+def _check_prune_equiv(seed):
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(rng, n_vertices=11, n_elabels=4, p_edge=0.3)
+    q = random_query_graph(rng, g, n_qv=4)
+    on = _solutions(g, ExecOpts(), q)
+    off = _solutions(g, ExecOpts(use_prune=False), q)
+    assert on == off
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_prune_on_equals_prune_off(seed):
+    _check_prune_equiv(seed * 104729 + 13)
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=20, deadline=None)
+def test_prune_on_equals_prune_off_property(seed):
+    _check_prune_equiv(seed)
+
+
+def _check_prune_equiv_live(seed):
+    """Random insert/delete stream through VersionedStore: prune-on and
+    prune-off agree on every snapshot and after compaction."""
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(rng, n_vertices=10, n_elabels=3, p_edge=0.25)
+    q = random_query_graph(rng, g, n_qv=3, with_id=False)
+    get_index(g)  # warm so compaction exercises patch_index
+    get_summary(g)
+    store = VersionedStore(g, auto_compact=False)
+    for _ in range(3):
+        n_ins = int(rng.integers(1, 8))
+        store.insert_edges(
+            [(int(rng.integers(g.n_vertices)), int(rng.integers(g.n_elabels)),
+              int(rng.integers(g.n_vertices))) for _ in range(n_ins)])
+        rows = np.repeat(np.arange(g.n_vertices), np.diff(g.out.indptr_all))
+        if rows.size:
+            k = int(rng.integers(0, min(4, rows.size) + 1))
+            pick = rng.choice(rows.size, k, replace=False)
+            store.delete_edges(
+                [(int(rows[i]), int(g.out.lab_all[i]), int(g.out.nbr_all[i]))
+                 for i in pick])
+        snap = store.snapshot()
+        on = _solutions(snap, ExecOpts(), q)
+        off = _solutions(snap, ExecOpts(use_prune=False), q)
+        assert on == off
+    snap = store.compact()
+    assert _solutions(snap, ExecOpts(), q) == \
+        _solutions(snap, ExecOpts(use_prune=False), q)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_prune_equivalence_under_update_stream(seed):
+    _check_prune_equiv_live(seed * 31337 + 7)
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=8, deadline=None)
+def test_prune_equivalence_under_update_stream_property(seed):
+    _check_prune_equiv_live(seed)
+
+
+def test_prune_equivalence_lubm_live(lubm_graph):
+    """LUBM engine-level equivalence on a live store: fresh snapshot after
+    updates, then after compaction."""
+    g, maps = lubm_graph
+    get_index(g)
+    get_summary(g)
+    store = VersionedStore(g, maps, auto_compact=False)
+    rng = np.random.default_rng(11)
+    rows = np.repeat(np.arange(g.n_vertices), np.diff(g.out.indptr_all))
+    pick = rng.choice(rows.size, 40, replace=False)
+    store.delete_edges(
+        [(int(rows[i]), int(g.out.lab_all[i]), int(g.out.nbr_all[i]))
+         for i in pick])
+    store.insert_edges(
+        [(int(rng.integers(g.n_vertices)), int(rng.integers(g.n_elabels)),
+          int(rng.integers(g.n_vertices))) for _ in range(60)])
+    for snap in (store.snapshot(), store.compact()):
+        on = SparqlEngine(snap, maps, opts=ExecOpts())
+        off = SparqlEngine(snap, maps, opts=ExecOpts(use_prune=False))
+        for name in ("Q1", "Q2", "Q4", "Q8", "Q9", "Q12"):
+            a = on.count(LUBM_QUERIES[name])
+            b = off.count(LUBM_QUERIES[name])
+            assert a == b, (name, a, b)
+
+
+def test_snapshot_rows_conservative():
+    """Snapshot signature rows over-approximate: every bit of the exact
+    post-compaction index is set in the snapshot overlay (tombstones are
+    ignored until compaction, inserts appear immediately)."""
+    rng = np.random.default_rng(5)
+    g = random_labeled_graph(rng, n_vertices=10, n_elabels=3, p_edge=0.3)
+    get_index(g)
+    store = VersionedStore(g, auto_compact=False)
+    store.insert_edges([(0, 1, 2), (3, 2, 4)])
+    rows = np.repeat(np.arange(g.n_vertices), np.diff(g.out.indptr_all))
+    store.delete_edges([(int(rows[0]), int(g.out.lab_all[0]),
+                         int(g.out.nbr_all[0]))])
+    snap = store.snapshot()
+    overlay = signature_rows(snap)
+    exact = get_index(store.compact().base).sig
+    assert np.all((overlay[:exact.shape[0]] & exact) == exact)
+
+
+# --------------------------------------------------------------------------
+# incremental maintenance == rebuild
+# --------------------------------------------------------------------------
+
+
+def _check_patch_equals_rebuild(seed):
+    rng = np.random.default_rng(seed)
+    g = random_labeled_graph(rng, n_vertices=12, n_elabels=4, p_edge=0.3)
+    get_index(g)
+    get_summary(g)
+    store = VersionedStore(g, auto_compact=False)
+    store.insert_edges(
+        [(int(rng.integers(g.n_vertices)), int(rng.integers(g.n_elabels)),
+          int(rng.integers(g.n_vertices))) for _ in range(6)])
+    rows = np.repeat(np.arange(g.n_vertices), np.diff(g.out.indptr_all))
+    if rows.size > 3:
+        pick = rng.choice(rows.size, 3, replace=False)
+        store.delete_edges(
+            [(int(rows[i]), int(g.out.lab_all[i]), int(g.out.nbr_all[i]))
+             for i in pick])
+    # a label change and a fresh vertex stress the summary re-key pass
+    if g.n_vlabels:
+        store.set_vertex_labels(0, (g.n_vlabels - 1,))
+    vid = store.add_vertex(labels=(0,) if g.n_vlabels else ())
+    store.insert_edges([(vid, 0, 0)])
+    ng = store.compact().base
+
+    idx = ng._sig_index
+    rebuilt = SignatureIndex.build(ng)
+    assert idx.graph is ng and idx.n_bits == rebuilt.n_bits
+    np.testing.assert_array_equal(idx.sig, rebuilt.sig)
+
+    summ = ng._summary_graph
+    fresh = SummaryGraph.build(ng)
+    assert (summ is None) == (fresh is None)
+    if summ is not None:
+        assert summ.graph is ng
+        np.testing.assert_array_equal(summ.classes, fresh.classes)
+        np.testing.assert_array_equal(summ.counts, fresh.counts)
+        np.testing.assert_array_equal(summ.class_count, fresh.class_count)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_compaction_patch_equals_rebuild(seed):
+    _check_patch_equals_rebuild(seed * 65537 + 3)
+
+
+@given(st.integers(0, 100_000))
+@settings(max_examples=10, deadline=None)
+def test_compaction_patch_equals_rebuild_property(seed):
+    _check_patch_equals_rebuild(seed)
+
+
+def test_patch_index_rebuilds_on_fold_width_change():
+    """Growing the predicate vocabulary past the old modulus invalidates
+    folded bits — patch_index must fall back to a full rebuild."""
+    rng = np.random.default_rng(9)
+    g = random_labeled_graph(rng, n_vertices=8, n_elabels=2, p_edge=0.3)
+    old = get_index(g)
+    store = VersionedStore(g, auto_compact=False)
+    store.insert_edges([(0, 5, 1)])  # new edge label: n_elabels 2 -> 6
+    ng = store.compact().base
+    assert ng.n_elabels == 6
+    idx = ng._sig_index
+    assert idx.n_bits == sig_bits(6) != old.n_bits
+    np.testing.assert_array_equal(idx.sig, SignatureIndex.build(ng).sig)
+
+
+# --------------------------------------------------------------------------
+# summary graph
+# --------------------------------------------------------------------------
+
+
+def test_summary_counts_partition_edges():
+    rng = np.random.default_rng(2)
+    g = random_labeled_graph(rng, n_vertices=14, n_elabels=4, p_edge=0.35)
+    s = get_summary(g)
+    assert s is not None
+    assert int(s.counts.sum()) == int(np.diff(g.out.indptr_all).sum())
+    assert int(s.class_count.sum()) == g.n_vertices
+    classes = primary_classes(g)
+    for v in range(g.n_vertices):
+        ls = g.vlabel_sets[v] if g.vlabel_sets else ()
+        assert classes[v] == (min(ls) if ls else g.n_vlabels)
+
+
+def test_summary_est_fanout_exact_on_single_label_classes():
+    """When every vertex has exactly its primary class, est_fanout is the
+    exact average fanout parent-class -> child-class."""
+    from repro.rdf.graph import LabeledGraph
+
+    # two A vertices, three B vertices; A --0--> B complete bipartite
+    src = np.repeat([0, 1], 3)
+    dst = np.tile([2, 3, 4], 2)
+    g = LabeledGraph.build(n_vertices=5, src=src, el=np.zeros(6, np.int64),
+                           dst=dst, n_elabels=1,
+                           vlabel_sets=[(0,), (0,), (1,), (1,), (1,)],
+                           n_vlabels=2)
+    s = get_summary(g)
+    assert s.est_fanout(0, True, (0,), (1,)) == pytest.approx(3.0)
+    assert s.est_fanout(0, False, (1,), (0,)) == pytest.approx(2.0)
+    assert s.est_fanout(0, True, (1,), (0,)) == pytest.approx(0.0)
+    assert s.est_fanout(0, True, (), (1,)) is None  # label-free side
+
+
+def test_cost_model_uses_summary(lubm_graph):
+    g, _ = lubm_graph
+    from repro.core.planner.cost import CostModel
+
+    cm = CostModel(g)
+    assert cm.summary is not None
+    assert cm.summary is get_summary(g)
+
+
+# --------------------------------------------------------------------------
+# executor surfaces
+# --------------------------------------------------------------------------
+
+
+def test_prune_counters_in_result_stats(lubm_graph):
+    g, maps = lubm_graph
+    eng = SparqlEngine(g, maps, opts=ExecOpts())
+    res = eng.query(LUBM_QUERIES["Q8"])
+    parts = [part
+             for br in res.stats["exec"]["branches"]
+             for part in [br.get("base") or {}] + list(br.get("optionals") or [])]
+    assert any("step_prune_in" in p for p in parts)
+    for p in parts:
+        for pi, po in zip(p.get("step_prune_in", []),
+                          p.get("step_prune_out", [])):
+            assert po <= pi
+
+
+def test_explain_analyze_reports_prune_ratio(lubm_graph):
+    g, maps = lubm_graph
+    eng = SparqlEngine(g, maps, opts=ExecOpts())
+    out = eng.explain(LUBM_QUERIES["Q2"], analyze=True)
+    steps = out["branches"][0]["steps"]
+    probed = [s for s in steps if s.get("sig_probe")]
+    assert probed, "Q2 should carry at least one signature probe"
+    for s in probed:
+        if s.get("prune_in"):
+            assert 0.0 <= s["prune_ratio"] <= 1.0

@@ -16,6 +16,7 @@ from repro.kernels.edge_exists import edge_exists_pallas
 from repro.kernels.expand_filter import expand_filter_compact_pallas
 from repro.kernels.segment_gather import (segment_gather_fixed_pallas,
                                           segment_gather_sum_pallas)
+from repro.kernels.signature_filter import signature_filter_pallas
 from repro.kernels.sorted_intersect import tile_membership_pallas
 
 
@@ -97,6 +98,47 @@ def test_bitmap_superset_shapes(b, w):
     np.testing.assert_array_equal(got, want)
     brute = np.all((bm & req) == req, axis=-1)
     np.testing.assert_array_equal(want, brute)
+
+
+# -------------------------------------------------------- signature filter
+@pytest.mark.parametrize("v,w,b", [(1, 2, 1), (17, 2, 5), (100, 4, 257),
+                                   (1024, 8, 2048)])
+def test_signature_filter_shapes(v, w, b):
+    rng = np.random.default_rng(v * 13 + w + b)
+    sig = rng.integers(0, 2**32, size=(v, w), dtype=np.uint64) \
+        .astype(np.uint32)
+    cand = rng.integers(-1, v, size=b).astype(np.int32)
+    req = (rng.integers(0, 2**32, size=w, dtype=np.uint64)
+           & rng.integers(0, 2**32, size=w, dtype=np.uint64)).astype(np.uint32)
+    got = np.asarray(signature_filter_pallas(jnp.asarray(sig),
+                                             jnp.asarray(cand),
+                                             jnp.asarray(req),
+                                             interpret=True, tile=256))
+    want = np.asarray(ref.signature_filter_ref(jnp.asarray(sig),
+                                               jnp.asarray(cand),
+                                               jnp.asarray(req)))
+    np.testing.assert_array_equal(got, want)
+    brute = np.all((sig[np.clip(cand, 0, v - 1)] & req) == req, axis=-1)
+    np.testing.assert_array_equal(want, brute)
+
+
+@given(st.integers(1, 50), st.integers(1, 6), st.integers(1, 100),
+       st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_signature_filter_property(v, w, b, seed):
+    rng = np.random.default_rng(seed)
+    sig = rng.integers(0, 2**32, size=(v, w), dtype=np.uint64) \
+        .astype(np.uint32)
+    cand = rng.integers(0, v, size=b).astype(np.int32)
+    req = (rng.integers(0, 2**32, size=w, dtype=np.uint64)
+           & rng.integers(0, 2**32, size=w, dtype=np.uint64)).astype(np.uint32)
+    got = np.asarray(signature_filter_pallas(jnp.asarray(sig),
+                                             jnp.asarray(cand),
+                                             jnp.asarray(req),
+                                             interpret=True, tile=64))
+    for i in range(b):
+        want = bool(np.all((sig[cand[i]] & req) == req))
+        assert bool(got[i]) == want
 
 
 # ---------------------------------------------------------- segment gather
