@@ -7,16 +7,27 @@ self-clocked load.  Open loop: a dispatcher injects requests at a target
 arrival rate regardless of completions — measures behavior when load is
 *offered*, not negotiated (queueing delay shows up in the percentiles).
 
-Emits ``serve.*`` CSV rows via benchmarks.common.emit.
+The coalesce mix is the suite's snapshot headline: an open-loop burst of
+same-*shape* queries whose constants follow a skewed (zipf-ish) draw from
+the course population, run twice — batching enabled vs disabled — with
+per-query counts validated against a direct engine reference.  The
+speedup ratio (batched qps / unbatched qps) is machine-independent and
+gated by ``benchmarks.check``.
+
+Emits ``serve.*`` CSV rows via benchmarks.common.emit; ``run()`` returns
+the snapshot dict persisted as ``BENCH_serve.json``.
 """
 
 from __future__ import annotations
 
+import random
+import re
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 
 from repro.rdf.workloads import LUBM_QUERIES
+from repro.serve.fingerprint import parameterize_query
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import Scheduler
 from repro.serve.server import DatasetRegistry
@@ -123,13 +134,125 @@ def open_loop(scale: int, target_qps: float, duration_s: float,
          f"{registry.metrics.coalesced.total():.0f}/{n}")
 
 
-def run(quick: bool = False) -> None:
+SAME_SHAPE_TMPL = """SELECT ?c ?t WHERE {{
+  {c} ub:takesCourse ?c .
+  ?t ub:teacherOf ?c .
+  ?t ub:worksFor ?d .
+}}"""
+
+
+def _skewed_constants(maps, n: int, pool_size: int = 512,
+                      seed: int = 0) -> list[str]:
+    """Zipf-ish draw over student instances: a hot head (whose exact
+    duplicates the scheduler's fingerprint coalescing already dedupes)
+    plus a long tail of *distinct* constants that only same-shape
+    batching can amortize — the arrival pattern the parameterized plan
+    cache is built for."""
+    terms = maps.dict.terms.to_str
+    pool = [t for t in terms
+            if re.match(r"ub:(Undergraduate|Graduate)Student\d", t)]
+    pool = pool[:pool_size]
+    weights = [1.0 / (i + 1) ** 0.7 for i in range(len(pool))]
+    return random.Random(seed).choices(pool, weights=weights, k=n)
+
+
+def _coalesce_run(scale: int, consts: list[str], ref: dict[str, int],
+                  batch_max: int, window_ms: float,
+                  workers: int, client_threads: int) -> dict:
+    """One open-loop burst through the scheduler; returns achieved qps and
+    the count-mismatch tally (must be zero)."""
+    g, maps = lubm_typeaware(scale, 0.6)
+    metrics = ServeMetrics()
+    registry = DatasetRegistry(metrics)
+    registry.register("lubm", g, maps)
+    mismatches = [0]
+    lock = threading.Lock()
+    with Scheduler(registry, workers=workers,
+                   max_queue=2 * len(consts) + client_threads,
+                   default_timeout_s=300.0, metrics=metrics,
+                   batch_max=batch_max, batch_window_ms=window_ms) as sched:
+        # warm outside the clock: per-constant plans for the unbatched path,
+        # and every pow2 vmap lane count the batched path can see
+        for c in ref:
+            registry.execute("lubm", SAME_SHAPE_TMPL.format(c=c))
+        if batch_max > 1:
+            pqs = [parameterize_query(SAME_SHAPE_TMPL.format(c=c))
+                   for c in consts[:batch_max]]
+            version = registry.version("lubm")
+            sz = 1
+            while sz <= min(batch_max, len(pqs)):
+                registry.execute_canonical_batch("lubm", pqs[:sz], version)
+                sz *= 2
+        # warm-up dispatches count too — measure deltas from here
+        coal0 = metrics.coalesced_queries.total()
+        disp0 = metrics.batch_size.count
+
+        def fire(c: str) -> None:
+            try:
+                res = sched.submit("lubm", SAME_SHAPE_TMPL.format(c=c))
+                ok = res.count == ref[c]
+            except Exception:
+                ok = False
+            if not ok:
+                with lock:
+                    mismatches[0] += 1
+
+        t0 = time.perf_counter()
+        with ThreadPoolExecutor(max_workers=client_threads) as pool:
+            for c in consts:
+                pool.submit(fire, c)
+        wall = time.perf_counter() - t0
+    return {
+        "qps": len(consts) / wall,
+        "mismatches": mismatches[0],
+        "coalesced": int(metrics.coalesced_queries.total() - coal0),
+        "dispatches": int(metrics.batch_size.count - disp0),
+    }
+
+
+def coalesce_mix(scale: int, quick: bool) -> dict:
+    """The snapshot headline: same burst, coalescing on vs off."""
+    n = 256 if quick else 1024
+    consts = _skewed_constants(lubm_typeaware(scale, 0.6)[1], n)
+    g, maps = lubm_typeaware(scale, 0.6)
+    ref_reg = DatasetRegistry()
+    ref_reg.register("lubm", g, maps)
+    ref = {c: ref_reg.execute("lubm", SAME_SHAPE_TMPL.format(c=c)).count
+           for c in dict.fromkeys(consts)}
+    # each side runs its best reasonable config: unbatched wants worker
+    # parallelism, batched wants few deep dispatches (workers beyond 2
+    # only fragment the batches)
+    on = _coalesce_run(scale, consts, ref, batch_max=64, window_ms=3.0,
+                       workers=2, client_threads=128)
+    off = _coalesce_run(scale, consts, ref, batch_max=1, window_ms=0.0,
+                        workers=4, client_threads=64)
+    speedup = on["qps"] / max(off["qps"], 1e-9)
+    emit(f"serve.coalesce.scale{scale}.on", 1.0 / max(on["qps"], 1e-9),
+         f"qps={on['qps']:.1f} coalesced={on['coalesced']}/{n} "
+         f"dispatches={on['dispatches']}")
+    emit(f"serve.coalesce.scale{scale}.off", 1.0 / max(off["qps"], 1e-9),
+         f"qps={off['qps']:.1f}")
+    emit(f"serve.coalesce.scale{scale}.speedup", 0, f"{speedup:.2f}x")
+    return {
+        "n_queries": n,
+        "distinct_constants": len(ref),
+        "counts_ok": on["mismatches"] == 0 and off["mismatches"] == 0,
+        "qps_on": round(on["qps"], 1),
+        "qps_off": round(off["qps"], 1),
+        "speedup": round(speedup, 3),
+        "coalesced_on": on["coalesced"],
+        "dispatches_on": on["dispatches"],
+    }
+
+
+def run(quick: bool = False) -> dict:
     scale = 1 if quick else 2
     rounds = 2 if quick else 5
     for clients in ([2, 4] if quick else [1, 4, 8]):
         closed_loop(scale, clients, rounds)
     for qps in ([20] if quick else [20, 50]):
         open_loop(scale, qps, duration_s=3.0 if quick else 10.0)
+    return {"coalesce": coalesce_mix(scale, quick)}
 
 
 if __name__ == "__main__":

@@ -151,9 +151,34 @@ def _check_typeaware(base: dict, fresh: dict, tol: float) -> list[str]:
     return bad
 
 
+def _check_serve(base: dict, fresh: dict, tol: float) -> list[str]:
+    """The coalesce mix's correctness bit must hold outright (per-query
+    counts validated against a direct engine reference), and the
+    batched-vs-unbatched throughput ratio — an internal same-host ratio —
+    must not collapse.  Scheduler throughput under threaded load is the
+    noisiest signal in the repo, so the floor is widened like store's."""
+    tol = max(tol, 0.6)
+    bad = []
+    b, f = base.get("coalesce"), fresh.get("coalesce")
+    if b is None or f is None:
+        return ["serve: coalesce mix missing from "
+                + ("baseline" if b is None else "fresh run")]
+    if not f.get("counts_ok", False):
+        bad.append("serve: batched results diverged from the direct-engine "
+                   "reference (correctness regression)")
+    old, new = float(b.get("speedup", 0)), float(f.get("speedup", 0))
+    if new < 1.0:
+        bad.append(f"serve: coalescing slower than unbatched "
+                   f"(speedup {new:.2f} < 1.0)")
+    elif _ratio_drift(old, new) > tol and new < old:
+        bad.append(f"serve: coalesce speedup {new:.2f} regressed "
+                   f">{tol:.0%} vs baseline {old:.2f}")
+    return bad
+
+
 _CHECKERS = {"exec": _check_exec, "planner": _check_planner,
              "update": _check_store, "index": _check_index,
-             "typeaware": _check_typeaware}
+             "typeaware": _check_typeaware, "serve": _check_serve}
 
 
 def compare(suite: str, base: dict, fresh: dict,

@@ -30,7 +30,7 @@ SUITE_MODULES = {"store": "bench_update"}
 # suites whose run() return value is persisted as BENCH_<name>.json next to
 # this file (named after the module), giving future PRs a perf trajectory
 # to compare against
-SNAPSHOT_SUITES = {"planner", "exec", "store", "index", "typeaware"}
+SNAPSHOT_SUITES = {"planner", "exec", "store", "index", "typeaware", "serve"}
 
 
 def main() -> None:

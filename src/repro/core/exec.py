@@ -49,7 +49,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any
 
 import jax
@@ -429,6 +429,12 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
     surviving-row count (``-1`` once frozen / not executed) and
     ``pins``/``pouts`` the signature-prune probe's candidates in/out
     (``-1`` when the step has no probe).
+
+    ``params`` (int32 ``[plan.n_params]``, empty for fully baked plans) is a
+    traced input: steps with ``param_slot >= 0`` check the new binding
+    against ``params[slot]`` instead of the baked ``bound_id``, so one
+    compiled program serves every constant instantiation of the shape — and
+    ``jax.vmap`` over the params axis answers a whole batch per launch.
     """
     nq = plan.query.n_vertices
     npv = max(1, plan.n_pvars)
@@ -444,7 +450,7 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
             raise ValueError("capacity schedule must be monotone "
                              f"non-decreasing (step {si}: {caps[si]} < {prev})")
 
-    def fn(chunk, chunk_count, p_init, org_init, sarrs):
+    def fn(chunk, chunk_count, p_init, org_init, params, sarrs):
         if not table_input:
             b = jnp.full((n_in, nq), _NULL, dtype=jnp.int32)
             b = b.at[:, plan.start_vertex].set(chunk)
@@ -553,9 +559,11 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
                     if filt_mask is None:
                         filt_mask = jnp.zeros(
                             (bitmap_src.shape[1],), jnp.uint32)
+                bid = (params[step.param_slot] if step.param_slot >= 0
+                       else jnp.int32(step.bound_id))
                 v_out, row_sel, kept = kops.expand_filter_compact(
                     nbr_src, filt_bitmap, start, deg, offs,
-                    filt_mask, jnp.int32(step.bound_id), cap)
+                    filt_mask, bid, cap)
                 if p_in is not None:
                     p_out = kept
                 # gather-based table build: when frozen, the identity index
@@ -619,7 +627,9 @@ def build_chunk_fn(dg: DeviceGraph, plan: ExecPlan, caps: tuple[int, ...],
                     ok &= (prev < 0) | (prev == el_new)
                     p_rows = p_rows.at[:, step.pvar_idx].set(
                         jnp.where(prev < 0, el_new, prev))
-                if step.bound_id >= 0:
+                if step.param_slot >= 0:
+                    ok &= v_new == params[step.param_slot]
+                elif step.bound_id >= 0:
                     ok &= v_new == jnp.int32(step.bound_id)
                 if "label_mask" in sarr:
                     bm = bitmap_src[jnp.clip(v_new, 0, n - 1)]
@@ -743,6 +753,31 @@ def _grow_caps(caps: list[int], si: int, max_cap: int) -> list[int]:
     return caps
 
 
+_SMALL_PLAN_ROWS = 512.0
+_SMALL_PLAN_STEPS = 6
+
+
+def _small_plan(plan: ExecPlan, opts: ExecOpts) -> bool:
+    """Is this plan a *candidate* for skipping the pipelined machinery?
+    For B1-class point lookups the per-step capacity schedule,
+    fused-kernel setup and async bookkeeping cost more than they save —
+    the legacy single-shot configuration is faster.  Planner estimates
+    alone cannot make the call (B1 and B8 are estimate-twins but land on
+    opposite sides), so this gate only shortlists: a tiny expected result,
+    few steps, no estimated intermediate blow-up, and a start set that
+    fits one chunk.  The executor settles shortlisted plans with a
+    one-time timed probe of both configurations (``_small_mode``)."""
+    if not (opts.cap_schedule or opts.use_fused or opts.suffix_resume):
+        return False  # already running the legacy configuration
+    if not plan.steps or len(plan.steps) > _SMALL_PLAN_STEPS:
+        return False
+    if plan.start_candidates.shape[0] > opts.chunk:
+        return False
+    peak = max(plan.est_rows, default=plan.estimated_rows())
+    return (plan.estimated_rows() <= _SMALL_PLAN_ROWS
+            and peak <= 4 * _SMALL_PLAN_ROWS)
+
+
 def _empty_stats(n_steps: int) -> dict[str, Any]:
     return {
         "step_rows": [0] * n_steps,
@@ -858,6 +893,10 @@ class Executor:
         # learned per-plan capacity schedules (overflow doublings persist,
         # so later chunks / queries start right-sized)
         self._caps_cache: dict[tuple, list[int]] = {}
+        # learned pipelined-vs-legacy choice for small plans (see
+        # _small_plan): True = legacy single-shot config wins for this
+        # plan signature
+        self._small_mode: dict[tuple, bool] = {}
 
     @property
     def view(self):
@@ -888,17 +927,18 @@ class Executor:
 
     def _get_fn(self, plan: ExecPlan, caps: tuple[int, ...], n_in: int,
                 table_input: bool, collect: str, start: int, stop: int,
-                dg: DeviceGraph | None = None):
+                dg: DeviceGraph | None = None, opts: ExecOpts | None = None):
         dg = self.dg if dg is None else dg
+        opts = self.opts if opts is None else opts
         # key on the [start, stop) capacity window only: suffix programs
         # that differ in capacities of steps they never execute are
         # byte-identical and must share one compile
         key = (plan.signature(), caps[start:stop], n_in, table_input,
-               collect, start, stop, self.opts.key(), dg.key())
+               collect, start, stop, opts.key(), dg.key())
         fn = self._compiled.get(key)
         fresh = fn is None
         if fresh:
-            raw = build_chunk_fn(dg, plan, caps, n_in, self.opts,
+            raw = build_chunk_fn(dg, plan, caps, n_in, opts,
                                  table_input, collect, start, stop)
             out_cap = caps[stop - 1] if stop > start else n_in
             donate = ()
@@ -1054,9 +1094,31 @@ class Executor:
         plan._snap_start = (token, cands)  # type: ignore[attr-defined]
         return cands
 
-    def _schedule(self, plan: ExecPlan, chunk_size: int) -> tuple[tuple, list[int]]:
+    def _param_start_candidates(self, plan: ExecPlan, params: np.ndarray,
+                                view=None) -> np.ndarray:
+        """Start-candidate resolution for a parameterized start vertex: the
+        set is exactly the parameter's vertex id, subject to the same
+        label-containment check the cost model applies to baked bound
+        vertices.  Signature pruning is skipped (it is a pure optimization
+        on a one-element set).  Never cached on the plan — it varies with
+        ``params`` — and valid against both the base graph and snapshots
+        (ids are stable across versions)."""
+        g = view if view is not None else self.graph
+        cid = int(params[plan.start_param_slot])
+        if cid < 0 or cid >= int(g.n_vertices):
+            return np.zeros(0, np.int32)
+        qv = plan.query.vertices[plan.start_vertex]
+        if qv.labels:
+            bm = np.asarray(g.label_bitmap[cid])
+            for lbl in qv.labels:
+                if not (int(bm[lbl >> 5]) >> (lbl & 31)) & 1:
+                    return np.zeros(0, np.int32)
+        return np.array([cid], np.int32)
+
+    def _schedule(self, plan: ExecPlan, chunk_size: int,
+                  opts: ExecOpts | None = None) -> tuple[tuple, list[int]]:
         """The (learned) per-step capacity schedule for this plan+chunk."""
-        opts = self.opts
+        opts = self.opts if opts is None else opts
         key = (plan.signature(), chunk_size, bool(opts.cap_schedule))
         caps = self._caps_cache.get(key)
         if caps is None:
@@ -1085,6 +1147,8 @@ class Executor:
         profile: bool | None = None,
         state: tuple | None = None,
         trace=None,
+        params: np.ndarray | None = None,
+        _opts_override: ExecOpts | None = None,
     ) -> Result:
         """Execute a plan.  ``initial=(B0, P0, origins)`` runs the plan's
         steps as an *extension* of existing rows (OPTIONAL left joins).
@@ -1095,20 +1159,75 @@ class Executor:
         ``trace`` (a :class:`repro.obs.Trace`) records compile / dispatch /
         device-wait / per-step spans under the caller's current span; a
         trace with ``profile_steps=True`` forces profiled execution so the
-        step spans carry real device wall times."""
+        step spans carry real device wall times.  ``params`` supplies a
+        parameterized plan's constant vector (int32 ``[plan.n_params]``);
+        a negative entry means the constant is absent from the dictionary
+        and short-circuits to an empty result."""
         state = self.pin() if state is None else state
         view, dg = state
         if plan.unsat:
             return Result(0, _empty(plan), _empty_p(plan), np.zeros(0, np.int32))
-        opts = self.opts
+        if plan.n_params:
+            if params is None:
+                raise ValueError(
+                    f"plan expects {plan.n_params} parameters; none given")
+            params = np.asarray(params, np.int32).reshape(-1)
+            if params.shape[0] != plan.n_params:
+                raise ValueError(f"expected {plan.n_params} parameters, "
+                                 f"got {params.shape[0]}")
+            if (params < 0).any():
+                # a hoisted constant missing from the dictionary: provably
+                # zero solutions (same contract as an unsat baked plan)
+                return Result(0,
+                              _empty(plan) if collect == "bindings" else None,
+                              _empty_p(plan), np.zeros(0, np.int32))
+        opts = self.opts if _opts_override is None else _opts_override
+        if (_opts_override is None and initial is None and trace is None
+                and not profile and _small_plan(plan, opts)):
+            # B1-class small queries: the pipelined machinery's fixed
+            # overhead (per-step capacity schedule, fused-kernel setup,
+            # async bookkeeping) can exceed the work saved.  Estimates
+            # can't settle which side a plan lands on, so probe once per
+            # plan signature: run each configuration twice (first to warm
+            # its compile cache, second timed) and remember the winner.
+            # Both configurations return identical results, so the probe
+            # is invisible to callers beyond one-time latency.
+            sig = plan.signature()
+            mode = self._small_mode.get(sig)
+            if mode is None:
+                legacy = replace(opts, cap_schedule=False,
+                                 suffix_resume=False, async_chunks=1,
+                                 use_fused=False)
+                kw = dict(collect=collect, state=state, params=params)
+                res = self.run(plan, _opts_override=opts, **kw)
+                t0 = time.perf_counter()
+                res = self.run(plan, _opts_override=opts, **kw)
+                t_pipe = time.perf_counter() - t0
+                self.run(plan, _opts_override=legacy, **kw)
+                t0 = time.perf_counter()
+                res_l = self.run(plan, _opts_override=legacy, **kw)
+                t_leg = time.perf_counter() - t0
+                # require a clear win before abandoning the pipeline: the
+                # probe is a single sample and ties should keep defaults
+                mode = t_leg < 0.9 * t_pipe
+                self._small_mode[sig] = mode
+                return res_l if mode else res
+            if mode:
+                opts = replace(opts, cap_schedule=False, suffix_resume=False,
+                               async_chunks=1, use_fused=False)
         profile = opts.profile if profile is None else profile
         if trace is not None and trace.profile_steps:
             profile = True
         nq = plan.query.n_vertices
+        params_dev = jnp.asarray(params) if plan.n_params \
+            else jnp.zeros(0, jnp.int32)
 
         if initial is None and not plan.steps:
             # point-shaped query (paper Algorithm 1 lines 2–4)
-            cands = self._start_candidates(plan, view)
+            if plan.start_param_slot >= 0 and params is not None:
+                cands = self._param_start_candidates(plan, params, view)
+            else:
+                cands = self._start_candidates(plan, view)
             b = np.full((cands.shape[0], nq), -1, dtype=np.int32)
             b[:, plan.start_vertex] = cands
             return Result(
@@ -1124,7 +1243,10 @@ class Executor:
             b0, p0, org0 = initial
             n_src = b0.shape[0]
         else:
-            start_cands = self._start_candidates(plan, view)
+            if plan.start_param_slot >= 0 and params is not None:
+                start_cands = self._param_start_candidates(plan, params, view)
+            else:
+                start_cands = self._start_candidates(plan, view)
             n_src = start_cands.shape[0]
         if n_src == 0 or (not extension and not plan.steps):
             # honor the collect contract even on the empty fast path —
@@ -1144,7 +1266,7 @@ class Executor:
         out_p: list[np.ndarray] = []
         out_o: list[np.ndarray] = []
         chunk_size = min(opts.chunk, max(1, n_src))
-        caps_key, caps = self._schedule(plan, chunk_size)
+        caps_key, caps = self._schedule(plan, chunk_size, opts)
 
         def host_args(offset: int, hi: int):
             n_real = hi - offset
@@ -1179,10 +1301,11 @@ class Executor:
             args = host_args(offset, hi)
             used = tuple(caps)
             fn, fresh = self._get_fn(plan, used, chunk_size, extension,
-                                     collect, 0, n_steps, dg)
+                                     collect, 0, n_steps, dg, opts)
             ci = stats["chunks"]
             stats["chunks"] += 1
-            return {"out": call_fn(fn, fresh, (*args, sarrs), chunk=ci),
+            return {"out": call_fn(fn, fresh, (*args, params_dev, sarrs),
+                                   chunk=ci),
                     "args": args, "caps": used, "offset": offset}
 
         def accumulate(start: int, upto: int, acc_from: int, totals, kepts,
@@ -1231,11 +1354,13 @@ class Executor:
                     new_caps = _grow_caps(list(used), ovf, opts.max_cap)
                     n_in = used[ovf - 1] if ovf > 0 else chunk_size
                     fn, fresh = self._get_fn(plan, tuple(new_caps), n_in,
-                                             True, collect, ovf, n_steps, dg)
+                                             True, collect, ovf, n_steps, dg,
+                                             opts)
                     (b, p, org, count, ovf_step, totals, kepts, pins,
                      pouts) = call_fn(
                         fn, fresh,
-                        (b[:n_in], count, p[:n_in], org[:n_in], sarrs),
+                        (b[:n_in], count, p[:n_in], org[:n_in], params_dev,
+                         sarrs),
                         resume_step=ovf)
                     start = ovf
                     acc_from = ovf
@@ -1249,10 +1374,11 @@ class Executor:
                     new_caps = [min(opts.max_cap, c * 2) for c in used]
                     fn, fresh = self._get_fn(plan, tuple(new_caps),
                                              chunk_size, extension, collect,
-                                             0, n_steps, dg)
+                                             0, n_steps, dg, opts)
                     (b, p, org, count, ovf_step, totals, kepts, pins,
                      pouts) = call_fn(
-                        fn, fresh, (*rec["args"], sarrs), retry=True)
+                        fn, fresh, (*rec["args"], params_dev, sarrs),
+                        retry=True)
                     start = 0
                 used = new_caps
                 # persist the learned schedule for subsequent chunks
@@ -1277,7 +1403,8 @@ class Executor:
             if profile and n_steps:
                 self._run_profiled_chunk(plan, sarrs, offset, hi, chunk_size,
                                          extension, collect, caps_key, stats,
-                                         host_args, drain, dg, trace)
+                                         host_args, drain, dg, trace,
+                                         params_dev, opts)
             else:
                 pending.append(dispatch(offset, hi))
                 if len(pending) >= max_inflight:
@@ -1300,14 +1427,165 @@ class Executor:
         return Result(total, bindings, pb, origins,
                       chunks_retried=sum(stats["step_retries"]), stats=stats)
 
+    def run_batch(self, plan: ExecPlan, params_mat: np.ndarray,
+                  collect: str = "bindings",
+                  state: tuple | None = None) -> list[Result]:
+        """Answer ``B`` same-shape queries in one device launch.
+
+        ``params_mat`` (int32 ``[B, plan.n_params]``) stacks one constant
+        vector per query; the chunk program is ``jax.vmap``-ed over the
+        params axis (and, when the start vertex itself is parameterized,
+        over per-lane start chunks), so a whole batch costs one dispatch.
+        Per-lane capacity overflow is handled by masking: an overflowing
+        lane freezes exactly like a single-query chunk, and only those
+        lanes are re-run individually through :meth:`run` (suffix-resume) —
+        results are bit-identical to per-query execution either way.
+
+        Lanes whose constants are missing from the dictionary (negative
+        ids) or whose parameterized start fails its label check return
+        empty results without touching the device.  Falls back to
+        sequential :meth:`run` calls when the plan's start set does not fit
+        one chunk.  The fused Pallas kernel is disabled under vmap — the
+        ref/jnp path is batchable on every backend."""
+        state = self.pin() if state is None else state
+        view, dg = state
+        params_mat = np.asarray(params_mat, np.int32)
+        if params_mat.ndim != 2 or params_mat.shape[1] != plan.n_params:
+            raise ValueError(
+                f"expected params [B, {plan.n_params}], got "
+                f"{params_mat.shape}")
+        B = params_mat.shape[0]
+        n_steps = len(plan.steps)
+
+        def empty() -> Result:
+            return Result(0,
+                          _empty(plan) if collect == "bindings" else None,
+                          _empty_p(plan), np.zeros(0, np.int32))
+
+        results: list[Result | None] = [None] * B
+        if plan.unsat:
+            return [empty() for _ in range(B)]
+        if not plan.steps or plan.n_params == 0 or B == 1:
+            # degenerate shapes: nothing to amortize, reuse the single path
+            return [self.run(plan, collect=collect, state=state,
+                             params=params_mat[i]) for i in range(B)]
+
+        opts = replace(self.opts, use_fused=False, async_chunks=1)
+        per_lane_start = plan.start_param_slot >= 0
+        if per_lane_start:
+            chunk_size = 1
+            lane_chunks = np.full((B, 1), -1, np.int32)
+            lane_counts = np.zeros(B, np.int32)
+            for i in range(B):
+                if (params_mat[i] < 0).any():
+                    results[i] = empty()
+                    continue
+                cands = self._param_start_candidates(plan, params_mat[i],
+                                                     view)
+                if cands.size == 0:
+                    results[i] = empty()
+                else:
+                    lane_chunks[i, 0] = cands[0]
+                    lane_counts[i] = 1
+        else:
+            start_cands = self._start_candidates(plan, view)
+            n_src = start_cands.shape[0]
+            if n_src == 0:
+                return [empty() for _ in range(B)]
+            if n_src > opts.chunk:
+                # multi-chunk start sets: per-lane accumulation across
+                # chunks loses the one-launch win anyway — run sequentially
+                return [self.run(plan, collect=collect, state=state,
+                                 params=params_mat[i]) for i in range(B)]
+            chunk_size = n_src
+            for i in range(B):
+                if (params_mat[i] < 0).any():
+                    results[i] = empty()
+
+        live = [i for i in range(B) if results[i] is None]
+        if not live:
+            return results  # type: ignore[return-value]
+
+        # pow2-pad the lane axis (bounds recompiles to log-many shapes);
+        # pad lanes duplicate the first live lane and are discarded
+        L = len(live)
+        L_pad = 1 << max(0, (L - 1).bit_length())
+        rows = live + [live[0]] * (L_pad - L)
+        pmat = jnp.asarray(params_mat[rows])
+        sarrs = self._arrays(plan, state)
+        if per_lane_start:
+            # one start row per lane: the single-query capacity floor
+            # (init_cap) would make every lane pay for the whole batch's
+            # worth of slots — vmapped compute is per-lane, so size caps to
+            # the estimate with a small floor.  Undersized lanes freeze and
+            # rerun solo, which keeps results bit-identical.
+            caps = list(plan.capacity_schedule(
+                chunk_size, min(opts.init_cap, 64), opts.max_cap,
+                opts.cap_slack))
+        else:
+            _, caps = self._schedule(plan, chunk_size, opts)
+        npv = max(1, plan.n_pvars)
+        used = tuple(caps)
+
+        key = ("batch", plan.signature(), used, chunk_size, L_pad,
+               per_lane_start, collect, opts.key(), dg.key())
+        fn = self._compiled.get(key)
+        if fn is None:
+            raw = build_chunk_fn(dg, plan, used, chunk_size, opts,
+                                 table_input=False, collect=collect,
+                                 start_step=0, stop_step=n_steps)
+            lane_ax = 0 if per_lane_start else None
+            fn = jax.jit(jax.vmap(raw,
+                                  in_axes=(lane_ax, lane_ax, None, None, 0,
+                                           None)))
+            self._compiled[key] = fn
+        p0 = jnp.zeros((chunk_size, npv), jnp.int32)
+        o0 = jnp.zeros((chunk_size,), jnp.int32)
+        if per_lane_start:
+            chunk_in = jnp.asarray(lane_chunks[rows])
+            count_in = jnp.asarray(lane_counts[rows])
+        else:
+            chunk_in = jnp.asarray(start_cands)
+            count_in = jnp.int32(n_src)
+        b, p, org, count, ovf_step, *_ = fn(chunk_in, count_in, p0, o0,
+                                            pmat, sarrs)
+        count_h = np.asarray(count)
+        ovf_h = np.asarray(ovf_step)
+        b_h = np.asarray(b) if collect == "bindings" else None
+        p_h = np.asarray(p) if collect == "bindings" else None
+        org_h = np.asarray(org) if collect == "bindings" else None
+        for li, qi in enumerate(live):
+            if int(ovf_h[li]) < n_steps:
+                # overflowing lane: redo it alone — run()'s suffix-resume
+                # doubling is deterministic, so the answer is identical to
+                # a lane that had fit
+                results[qi] = self.run(plan, collect=collect, state=state,
+                                       params=params_mat[qi])
+                continue
+            c = int(count_h[li])
+            stats = _empty_stats(n_steps)
+            stats["chunks"] = 1
+            stats["batched"] = True
+            if collect == "bindings":
+                results[qi] = Result(c, b_h[li, :c].copy(),
+                                     p_h[li, :c].copy(),
+                                     org_h[li, :c].copy(), stats=stats)
+            else:
+                results[qi] = Result(c, None, _empty_p(plan),
+                                     np.zeros(0, np.int32), stats=stats)
+        return results  # type: ignore[return-value]
+
     def _run_profiled_chunk(self, plan, sarrs, offset, hi, chunk_size,
                             extension, collect, caps_key, stats, host_args,
                             drain, dg: DeviceGraph | None = None,
-                            trace=None) -> None:
+                            trace=None, params_dev=None,
+                            opts: ExecOpts | None = None) -> None:
         """Step-at-a-time execution of one chunk with host syncs, filling
         per-step wall times; overflow handling is inherently suffix-resume
         (each window re-runs alone with a doubled capacity)."""
-        opts = self.opts
+        opts = self.opts if opts is None else opts
+        if params_dev is None:
+            params_dev = jnp.zeros(0, jnp.int32)
         n_steps = len(plan.steps)
         caps = self._caps_cache[caps_key]
         args = host_args(offset, hi)
@@ -1320,7 +1598,7 @@ class Executor:
                 n_in = chunk_size if si == 0 else used[si - 1]
                 fn, fresh = self._get_fn(plan, used, n_in,
                                          extension or si > 0,
-                                         collect, si, si + 1, dg)
+                                         collect, si, si + 1, dg, opts)
                 if fresh:
                     stats["compiles"] += 1
                 span_cm = (trace.span("compile" if fresh else "dispatch",
@@ -1330,10 +1608,11 @@ class Executor:
                     span_cm.__enter__()
                 t0 = time.perf_counter()
                 if si == 0:
-                    out = fn(*args, sarrs)
+                    out = fn(*args, params_dev, sarrs)
                 else:
                     b, p, org, count = state
-                    out = fn(b[:n_in], count, p[:n_in], org[:n_in], sarrs)
+                    out = fn(b[:n_in], count, p[:n_in], org[:n_in],
+                             params_dev, sarrs)
                 jax.block_until_ready(out)
                 if span_cm is not None:
                     span_cm.__exit__(None, None, None)

@@ -184,6 +184,7 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
             steps.append(Step(u=s, parent=-1, elabel=-1, forward=True,
                               labels=q.vertices[s].labels,
                               bound_id=max(q.vertices[s].bound_id, -1),
+                              param_slot=q.vertices[s].param_slot,
                               optional_group=optional_groups.get(s, -1),
                               restart_candidates=cands,
                               sig_mask=s_sig))
@@ -268,6 +269,8 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
         steps=steps,
         order=global_order,
         n_pvars=len(q.pvars),
+        n_params=1 + max((v.param_slot for v in q.vertices), default=-1),
+        start_param_slot=q.vertices[start_vertex].param_slot,
         start_num_filters=start_nf,
         start_sig=start_sig,
         est_fanout=est_fanout,
@@ -445,6 +448,7 @@ def _emit_vertex_step(g, cm: CostModel, q: QueryGraph, w: int, placed: set[int],
         pvar_idx=_pvar_idx(q, e),
         labels=qv.labels,
         bound_id=max(qv.bound_id, -1),
+        param_slot=qv.param_slot,
         nontree=tuple(nts),
         min_out_ntypes=mo if use_deg else 0,
         min_in_ntypes=mi if use_deg else 0,

@@ -46,6 +46,12 @@ def explain_plan(plan: ExecPlan, maps=None) -> dict:
             rec["predicate"] = pred if pred is not None else int(s.elabel)
         elif s.pvar_idx >= 0:
             rec["predicate"] = "?" + q.pvars[s.pvar_idx]
+        if s.param_slot >= 0:
+            # hoisted constant: the equality check reads params[k] at run
+            # time instead of a baked vertex id
+            rec["param"] = f"param[{s.param_slot}]"
+        elif s.bound_id >= 0:
+            rec["bound"] = True
         if s.nontree:
             rec["nontree_checks"] = len(s.nontree)
         if s.sig_mask is not None:
@@ -55,7 +61,7 @@ def explain_plan(plan: ExecPlan, maps=None) -> dict:
         if s.restart_candidates is not None:
             rec["restart_candidates"] = int(s.restart_candidates.shape[0])
         steps.append(rec)
-    return {
+    out = {
         "start_vertex": _vertex_name(q, plan.start_vertex),
         "start_candidates": int(plan.start_candidates.shape[0]),
         "order": [_vertex_name(q, u) for u in plan.order],
@@ -64,3 +70,8 @@ def explain_plan(plan: ExecPlan, maps=None) -> dict:
         "build_ms": round(plan.build_ms, 3),
         "steps": steps,
     }
+    if plan.n_params:
+        out["n_params"] = plan.n_params
+        if plan.start_param_slot >= 0:
+            out["start_param"] = f"param[{plan.start_param_slot}]"
+    return out

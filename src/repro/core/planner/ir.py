@@ -59,6 +59,9 @@ class Step:
     nlf_in_mask: np.ndarray | None = None
     num_filters: tuple[tuple[str, float], ...] = ()
     optional_group: int = -1  # -1 = required pattern
+    # >= 0: the bound-id equality check reads params[param_slot] (a traced
+    # scalar input of the chunk program) instead of the baked ``bound_id``
+    param_slot: int = -1
     # restart steps expand the table by this component's start candidates
     restart_candidates: np.ndarray | None = None
     # required neighborhood signature (repro.index; uint32 [2W]) — tree
@@ -85,6 +88,11 @@ class ExecPlan:
     # exactly like ``start_num_filters`` (the baked candidate array already
     # has it applied)
     start_sig: np.ndarray | None = None
+    # parameterized plans: number of constant slots (0 = fully baked) and
+    # the start vertex's slot when the start itself is parameterized (the
+    # executor then resolves start candidates from params at run time)
+    n_params: int = 0
+    start_param_slot: int = -1
     # estimated fanout per step (for capacity presizing)
     est_fanout: list[float] = field(default_factory=list)
     # raw per-step expansion factor (candidates produced per input row
@@ -106,13 +114,15 @@ class ExecPlan:
                     s.bound_id, s.min_out_ntypes, s.min_in_ntypes,
                     tuple((c.other, c.elabel, c.forward, c.pvar_idx, c.self_loop)
                           for c in s.nontree),
-                    s.num_filters, s.optional_group,
+                    s.num_filters, s.optional_group, s.param_slot,
                     None if s.restart_candidates is None
                     else len(s.restart_candidates),
                 )
                 for s in self.steps
             ),
             self.n_pvars,
+            self.n_params,
+            self.start_param_slot,
         )
 
     def capacity_schedule(self, chunk: int, init_cap: int, max_cap: int,

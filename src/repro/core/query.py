@@ -32,6 +32,9 @@ class QVertex:
     bound_id: int = -1  # data vertex id (ID attribute), -1 if free
     # original term string for diagnostics
     term: str | None = None
+    # parameter slot when the bound id is a plan parameter (-1 = literal);
+    # the executor reads the actual id from params[param_slot] at run time
+    param_slot: int = -1
 
 
 @dataclass
@@ -49,6 +52,10 @@ class QueryGraph:
     var_to_vertex: dict[str, int] = field(default_factory=dict)
     pvars: list[str] = field(default_factory=list)
     unsat: bool = False
+    # a parameterized constant was missing from the dictionary — the family
+    # representative cannot anchor cost estimation (callers treat the shape
+    # as ineligible for parameterized compilation rather than unsat)
+    param_missing: bool = False
 
     @property
     def n_vertices(self) -> int:
@@ -90,7 +97,15 @@ class QueryBuildError(ValueError):
     pass
 
 
-def build_query_graph(triples: list[TriplePattern], maps: TransformMaps) -> QueryGraph:
+def build_query_graph(triples: list[TriplePattern], maps: TransformMaps,
+                      param_ids: dict[int, int] | None = None) -> QueryGraph:
+    """``param_ids`` maps ``id(term)`` of hoisted constant occurrences to
+    their parameter slot (the parser builds a fresh term object per
+    occurrence, so object identity distinguishes occurrences of equal
+    constants).  A parameterized occurrence still resolves its bound id (the
+    representative's constant anchors cost estimation) but a miss sets
+    ``param_missing`` instead of ``unsat`` — other family members may well
+    resolve."""
     q = QueryGraph()
 
     def vertex_of(term) -> int:
@@ -105,11 +120,16 @@ def build_query_graph(triples: list[TriplePattern], maps: TransformMaps) -> Quer
         text = term.value if isinstance(term, Iri) else f'"{term.value}"'
         vid = maps.vertex_of(text)
         idx = len(q.vertices)
+        slot = -1 if param_ids is None else param_ids.get(id(term), -1)
         q.vertices.append(
-            QVertex(var=None, bound_id=vid if vid is not None else -2, term=text)
+            QVertex(var=None, bound_id=vid if vid is not None else -2,
+                    term=text, param_slot=slot)
         )
         if vid is None:
-            q.unsat = True
+            if slot >= 0:
+                q.param_missing = True
+            else:
+                q.unsat = True
         return idx
 
     type_aware = maps.kind == "type_aware"

@@ -26,6 +26,14 @@ miss sharing, but never computes a wrong answer.
 SELECT order is preserved (it fixes result-column order), and the renaming
 map is returned so callers can restore the caller's variable names on the
 way out of a shared plan or cached result.
+
+``parameterize_query`` additionally produces a *shape* fingerprint: the same
+canonicalization with hoistable constants blinded, so LUBM-style template
+queries that differ only in which IRI they mention share one parameterized
+plan.  The hoisted constants come back as a slot-ordered vector; slot order
+is the occurrence order over the shape-canonical group (see
+``iter_param_occurrences``), which the engine reuses verbatim to assign
+parameter slots to query-graph vertices.
 """
 
 from __future__ import annotations
@@ -62,20 +70,25 @@ def _h(obj) -> str:
     return hashlib.sha256(repr(obj).encode()).hexdigest()[:16]
 
 
-def _term_struct(t) -> tuple:
-    """Structural key of a term with variables blinded."""
+def _term_struct(t, blind: frozenset[int] | None = None) -> tuple:
+    """Structural key of a term with variables blinded.  ``blind`` holds
+    ``id()``s of constant occurrences to blind too (shape canonicalization:
+    every hoistable constant collapses to one placeholder key)."""
     if isinstance(t, Var):
         return ("v",)
+    if blind is not None and id(t) in blind:
+        return ("c?",)
     if isinstance(t, Iri):
         return ("i", t.value)
     return ("l", t.value, t.numeric)
 
 
-def _term_sig(t, sig: dict[str, str]) -> tuple:
+def _term_sig(t, sig: dict[str, str],
+              blind: frozenset[int] | None = None) -> tuple:
     """Structural key of a term with variables replaced by their signature."""
     if isinstance(t, Var):
         return ("v", sig[t.name])
-    return _term_struct(t)
+    return _term_struct(t, blind)
 
 
 def _walk(g: GroupPattern, ctx: str, triples: list, filters: list) -> None:
@@ -101,7 +114,8 @@ def _filter_occurrence(ctx: str, f, name: str) -> tuple:
     return ("f", ctx, side, f.op, _term_struct(f.lhs), _term_struct(f.rhs))
 
 
-def _variable_signatures(ast: SelectQuery) -> dict[str, str]:
+def _variable_signatures(ast: SelectQuery,
+                         blind: frozenset[int] | None = None) -> dict[str, str]:
     triples: list[tuple[str, TriplePattern]] = []
     filters: list[tuple] = []
     _walk(ast.where, "b", triples, filters)
@@ -112,7 +126,8 @@ def _variable_signatures(ast: SelectQuery) -> dict[str, str]:
         occ.setdefault(name, []).append(entry)
 
     for ctx, tp in triples:
-        key = (ctx, _term_struct(tp.s), _term_struct(tp.p), _term_struct(tp.o))
+        key = (ctx, _term_struct(tp.s, blind), _term_struct(tp.p, blind),
+               _term_struct(tp.o, blind))
         for role, t in (("s", tp.s), ("p", tp.p), ("o", tp.o)):
             if isinstance(t, Var):
                 _note(t.name, ("t", role, key))
@@ -137,7 +152,7 @@ def _variable_signatures(ast: SelectQuery) -> dict[str, str]:
                     role = "".join(
                         r for r, t in zip("spo", terms)
                         if isinstance(t, Var) and t.name == name)
-                    nbr.append((ctx, role, tuple(_term_sig(t, sig)
+                    nbr.append((ctx, role, tuple(_term_sig(t, sig, blind)
                                                  for t in terms)))
             nxt[name] = _h((sig[name], tuple(sorted(nbr))))
         sig = nxt
@@ -145,9 +160,11 @@ def _variable_signatures(ast: SelectQuery) -> dict[str, str]:
 
 
 # ------------------------------------------------------------ serialization
-def _ser_term(t) -> str:
+def _ser_term(t, blind: frozenset[int] | None = None) -> str:
     if isinstance(t, Var):
         return "?" + t.name
+    if blind is not None and id(t) in blind:
+        return "◆"  # hoisted constant placeholder (shape serialization)
     if isinstance(t, Iri):
         return f"<{t.value}>"
     num = "" if t.numeric is None else f"#{t.numeric!r}"
@@ -160,17 +177,21 @@ def _ser_filter(f) -> str:
     return f"(cmp {f.op} {_ser_term(f.lhs)} {_ser_term(f.rhs)})"
 
 
-def _ser_group(g: GroupPattern) -> str:
-    parts = ["T[" + " ".join(f"({_ser_term(tp.s)} {_ser_term(tp.p)} "
-                             f"{_ser_term(tp.o)})" for tp in g.triples) + "]",
+def _ser_group(g: GroupPattern, blind: frozenset[int] | None = None) -> str:
+    parts = ["T[" + " ".join(f"({_ser_term(tp.s, blind)} "
+                             f"{_ser_term(tp.p, blind)} "
+                             f"{_ser_term(tp.o, blind)})"
+                             for tp in g.triples) + "]",
              "F[" + " ".join(_ser_filter(f) for f in g.filters) + "]",
-             "O[" + " ".join(_ser_group(o) for o in g.optionals) + "]",
-             "U[" + " ".join("(" + "|".join(_ser_group(b) for b in branches)
+             "O[" + " ".join(_ser_group(o, blind) for o in g.optionals) + "]",
+             "U[" + " ".join("(" + "|".join(_ser_group(b, blind)
+                                            for b in branches)
                              + ")" for branches in g.unions) + "]"]
     return "{" + "".join(parts) + "}"
 
 
-def serialize_query(ast: SelectQuery) -> str:
+def serialize_query(ast: SelectQuery,
+                    blind: frozenset[int] | None = None) -> str:
     sel = "*" if not ast.select else ",".join("?" + v for v in ast.select)
     # solution modifiers are part of query identity: a cached result for
     # LIMIT 10 must not answer LIMIT 20 (plans could be shared, results not
@@ -182,7 +203,7 @@ def serialize_query(ast: SelectQuery) -> str:
         mods += f"|L{ast.limit}"
     if ast.offset:
         mods += f"|O{ast.offset}"
-    return f"SELECT({sel})WHERE{_ser_group(ast.where)}{mods}"
+    return f"SELECT({sel})WHERE{_ser_group(ast.where, blind)}{mods}"
 
 
 # ---------------------------------------------------------- canonical form
@@ -192,11 +213,20 @@ def _rename_term(t, rename: dict[str, str]):
     return t
 
 
-def _canon_group(g: GroupPattern, rename: dict[str, str]) -> GroupPattern:
+def _canon_group(g: GroupPattern, rename: dict[str, str],
+                 blind: frozenset[int] | None = None) -> GroupPattern:
+    # Constants pass through _rename_term as the SAME objects, so id()-keyed
+    # blinding survives into the canonical AST.  Shape canonicalization sorts
+    # on the blinded key first (family members must agree on triple order)
+    # with the real serialization as a deterministic tie-break — tied triples
+    # are structurally interchangeable, so either resolution pairs slots with
+    # consistent structural positions.
     triples = sorted(
         (TriplePattern(_rename_term(tp.s, rename), _rename_term(tp.p, rename),
                        _rename_term(tp.o, rename)) for tp in g.triples),
-        key=lambda tp: (_ser_term(tp.p), _ser_term(tp.s), _ser_term(tp.o)))
+        key=lambda tp: ((_ser_term(tp.p, blind), _ser_term(tp.s, blind),
+                         _ser_term(tp.o, blind)),
+                        (_ser_term(tp.p), _ser_term(tp.s), _ser_term(tp.o))))
     filters: list = []
     for f in g.filters:
         if isinstance(f, Regex):
@@ -210,8 +240,8 @@ def _canon_group(g: GroupPattern, rename: dict[str, str]) -> GroupPattern:
     # earlier one) and the first UNION branch fixes SELECT-* projection, so
     # neither is commutative — sorting them would merge non-equivalent
     # queries under one fingerprint
-    optionals = [_canon_group(o, rename) for o in g.optionals]
-    unions = [[_canon_group(b, rename) for b in branches]
+    optionals = [_canon_group(o, rename, blind) for o in g.optionals]
+    unions = [[_canon_group(b, rename, blind) for b in branches]
               for branches in g.unions]
     return GroupPattern(triples, filters, optionals, unions)
 
@@ -238,3 +268,95 @@ def fingerprint_query(source: str | SelectQuery) -> str:
     """Fingerprint a query given as SPARQL text or a parsed AST."""
     ast = parse_sparql(source) if isinstance(source, str) else source
     return canonicalize_query(ast).fingerprint
+
+
+# ------------------------------------------------------- parameterized shape
+# Predicates whose constant terms anchor the *structure* of the query under
+# the type-aware transformation (they fold into vertex labels, not bound
+# vertices) — never hoisted into parameters.
+_STRUCT_PREDS = frozenset({"rdf:type", "rdf:subClassOf"})
+
+
+def const_key(t) -> str:
+    """Dictionary-text form of a constant term — must match what
+    ``core.query.build_query_graph`` feeds ``maps.vertex_of``."""
+    return t.value if isinstance(t, Iri) else f'"{t.value}"'
+
+
+def iter_param_occurrences(g: GroupPattern):
+    """Yield hoistable constant term occurrences of a group in slot order.
+
+    Slot order is definitional: the fingerprint layer extracts the constant
+    vector with it and the engine assigns plan parameter slots with it, so
+    both must call this one generator.  Each occurrence is its own slot even
+    when two occurrences mention the same constant (mirroring
+    ``build_query_graph``, which makes a fresh bound vertex per occurrence).
+    """
+    for tp in g.triples:
+        if isinstance(tp.p, Iri) and tp.p.value in _STRUCT_PREDS:
+            continue
+        for t in (tp.s, tp.o):
+            if not isinstance(t, Var):
+                yield t
+    for og in g.optionals:
+        yield from iter_param_occurrences(og)
+    for union in g.unions:
+        for branch in union:
+            yield from iter_param_occurrences(branch)
+
+
+@dataclass(frozen=True)
+class ParamQuery:
+    """A query split into (shape, constant vector) plus its exact canonical
+    form.  ``shape_query`` is the shape-canonical AST with this member's real
+    constants still in place — the engine compiles the family plan from it
+    (any member works as representative: parameter slots make the compiled
+    program constant-independent)."""
+
+    canon: CanonicalQuery       # exact canonicalization (result-cache key)
+    shape: str                  # fingerprint with hoistable constants blinded
+    consts: tuple[str, ...]     # hoisted constants (dictionary text), by slot
+    shape_query: SelectQuery    # shape-canonical AST, slot order authoritative
+    rename: dict[str, str] = field(default_factory=dict)  # original -> shape
+
+    @property
+    def inverse(self) -> dict[str, str]:
+        return {c: o for o, c in self.rename.items()}
+
+    def restore(self, variables: list[str]) -> list[str]:
+        """Map shape-canonical variable names back to this caller's names."""
+        inv = self.inverse
+        return [inv.get(v, v) for v in variables]
+
+
+def parameterize_query(source: str | SelectQuery) -> ParamQuery:
+    """Canonicalize a query to a (shape fingerprint, constant vector) pair.
+
+    Runs the exact canonicalization plus a second pass with hoistable
+    constants blinded in the WL refinement, the triple sort, and the
+    serialization.  Queries with no hoistable constants degrade to
+    shape == exact fingerprint (a family of one).
+    """
+    ast = parse_sparql(source) if isinstance(source, str) else source
+    canon = canonicalize_query(ast)
+    blind = frozenset(id(t) for t in iter_param_occurrences(ast.where))
+    if not blind:
+        return ParamQuery(canon=canon, shape=canon.fingerprint, consts=(),
+                          shape_query=canon.query, rename=canon.rename)
+    sig = _variable_signatures(ast, blind)
+    order = sorted(sig, key=lambda name: (sig[name], name))
+    rename = {name: f"v{i}" for i, name in enumerate(order)}
+    shape_ast = SelectQuery(
+        select=[rename.get(v, v) for v in ast.select],
+        where=_canon_group(ast.where, rename, blind),
+        prefixes={},
+        distinct=ast.distinct,
+        limit=ast.limit,
+        offset=ast.offset,
+    )
+    text = serialize_query(shape_ast, blind)
+    shape = hashlib.sha256(text.encode()).hexdigest()[:32]
+    consts = tuple(const_key(t)
+                   for t in iter_param_occurrences(shape_ast.where))
+    return ParamQuery(canon=canon, shape=shape, consts=consts,
+                      shape_query=shape_ast, rename=rename)

@@ -354,6 +354,14 @@ class ServeMetrics:
             "repro_dataset_inflight_queries",
             "queries submitted and not yet completed, per dataset",
             label="dataset")
+        self.batch_size = r.histogram(
+            "repro_batch_size",
+            "queries answered per batched device dispatch (1 = unbatched)",
+            buckets=(1, 2, 4, 8, 16, 32, 64, math.inf))
+        self.coalesced_queries = r.counter(
+            "repro_coalesced_queries_total",
+            "queries answered via same-shape batched dispatch (lanes of "
+            "batches with size >= 2)")
         self._completions: deque[float] = deque(maxlen=65536)
         self._started = time.monotonic()
         self._lock = threading.Lock()
@@ -422,6 +430,19 @@ class ServeMetrics:
             r.gauge(f"repro_{kind}_cache_hit_ratio_{dataset}",
                     f"{kind} cache hit ratio for dataset {dataset}",
                     fn=lambda c=cache: c.stats.hit_rate)
+
+    def attach_param_family_gauge(self, dataset: str, engine) -> None:
+        """Expose an engine's parameterized-family plan-cache hit ratio
+        (hits = queries answered by an already-compiled shape plan) as
+        render-time gauges, like :meth:`attach_cache_gauges`."""
+        r = self.registry
+        for stat in ("hits", "misses"):
+            r.gauge(f"repro_param_family_{stat}_{dataset}",
+                    f"param-family plan-cache {stat} for dataset {dataset}",
+                    fn=lambda e=engine, s=stat: getattr(e.param_stats, s))
+        r.gauge(f"repro_param_family_hit_ratio_{dataset}",
+                f"param-family plan-cache hit ratio for dataset {dataset}",
+                fn=lambda e=engine: e.param_stats.hit_rate)
 
     def summary(self) -> dict:
         out = {"requests": self.requests.total(),

@@ -6,6 +6,19 @@ with the same key *coalesce*: one flight executes, every waiter gets the
 shared result with its own variable names restored — the serving-layer
 analogue of the engine's shared-plan compilation, applied to execution.
 
+Distinct queries of the same *shape* (same structure, different constants)
+additionally coalesce into one **batched dispatch**: the submitting thread
+parameterizes the query (``fingerprint.parameterize_query``), flights are
+grouped by ``(dataset, shape, graph_version)``, and the worker that picks
+up the first such flight *claims* up to ``batch_max - 1`` same-shape
+queued peers and answers the whole batch in one vmapped device launch via
+``registry.execute_canonical_batch`` — splitting results back per request.
+A ``batch_window_ms`` micro-deadline optionally holds a lone eligible
+flight briefly to let peers arrive.  Forced-trace flights never coalesce
+or batch (each requester wants *their* execution observed), but their
+traces carry a ``batch_assemble`` span so batched and solo timelines stay
+comparable.
+
 Admission control bounds the number of queued flights (excess submissions
 fail fast with :class:`Overloaded`) and every request carries a deadline:
 waiters stop waiting when it passes, and a flight that is still queued past
@@ -22,7 +35,8 @@ from dataclasses import dataclass, field
 
 from repro.core.sparql_exec import QueryResult
 from repro.rdf.sparql import SelectQuery, parse_sparql
-from repro.serve.fingerprint import CanonicalQuery, canonicalize_query
+from repro.serve.fingerprint import (CanonicalQuery, ParamQuery,
+                                     canonicalize_query, parameterize_query)
 from repro.serve.metrics import ServeMetrics
 from repro.utils import get_logger
 
@@ -62,6 +76,12 @@ class _Flight:
     error: Exception | None = None
     waiters: int = 1
     trace: object | None = None  # repro.obs.Trace for forced-trace requests
+    # same-shape batching: the parameterized form (None = batching-
+    # ineligible), the batch key (dataset, shape, version), and whether a
+    # batch leader already claimed this flight (its worker then skips it)
+    param: ParamQuery | None = None
+    bkey: tuple | None = None
+    claimed: bool = False
 
 
 _SENTINEL = object()
@@ -77,15 +97,25 @@ class Scheduler:
 
     def __init__(self, registry, *, workers: int = 4, max_queue: int = 64,
                  default_timeout_s: float = 30.0,
-                 metrics: ServeMetrics | None = None):
+                 metrics: ServeMetrics | None = None,
+                 batch_max: int = 16, batch_window_ms: float = 0.0):
         if workers < 1:
             raise ValueError("workers must be >= 1")
         self.registry = registry
         self.max_queue = max_queue
         self.default_timeout_s = default_timeout_s
         self.metrics = metrics or ServeMetrics()
+        # same-shape batching: at most batch_max queries per dispatch;
+        # batch_max <= 1 disables batching entirely.  batch_window_ms > 0
+        # holds a lone eligible flight that long for peers to arrive
+        # (trades a bounded latency bump for batching under light load).
+        self.batch_max = batch_max
+        self.batch_window_s = max(0.0, batch_window_ms) / 1e3
+        self._can_batch = (batch_max > 1 and callable(
+            getattr(registry, "execute_canonical_batch", None)))
         self._queue: queue.Queue = queue.Queue()
         self._inflight: dict[tuple, _Flight] = {}
+        self._pending: dict[tuple, list[_Flight]] = {}  # bkey -> queued
         self._lock = threading.Lock()
         self._threads: list[threading.Thread] = []
         self._running = False
@@ -143,6 +173,7 @@ class Scheduler:
         if trace:
             from repro.obs import Trace
             t = Trace(profile_steps=True)
+        pq: ParamQuery | None = None
         if isinstance(query, CanonicalQuery):
             canon = query
         else:
@@ -150,7 +181,15 @@ class Scheduler:
                 with _maybe_span(t, "parse"):
                     query = parse_sparql(query)
             with _maybe_span(t, "fingerprint"):
-                canon = canonicalize_query(query)
+                if t is None and self._can_batch:
+                    # shape + constants in one pass (canonicalization is a
+                    # sub-step of parameterization, so no duplicate work)
+                    pq = parameterize_query(query)
+                    canon = pq.canon
+                    if not pq.consts:
+                        pq = None
+                else:
+                    canon = canonicalize_query(query)
         version = self.registry.version(dataset)
         timeout = self.default_timeout_s if timeout_s is None else timeout_s
         deadline = time.monotonic() + timeout
@@ -174,6 +213,10 @@ class Scheduler:
                         f"queue full ({self.max_queue} flights pending)")
                 flight = _Flight(key=key, dataset=dataset, canonical=canon,
                                  version=version, deadline=deadline, trace=t)
+                if pq is not None:
+                    flight.param = pq
+                    flight.bkey = (dataset, pq.shape, version)
+                    self._pending.setdefault(flight.bkey, []).append(flight)
                 self._inflight[key] = flight
                 self._queue.put(flight)
                 coalesced = False
@@ -212,16 +255,29 @@ class Scheduler:
             self.metrics.queue_depth.set(self._queue.qsize())
             # expiry check and de-registration are atomic with submit's
             # attach/deadline-extend, so no request can coalesce onto a
-            # flight that is about to be declared dead
+            # flight that is about to be declared dead; a claimed flight
+            # was (or is being) answered by a batch leader — skip it
             with self._lock:
+                if flight.claimed:
+                    continue
                 expired = time.monotonic() > flight.deadline
                 if expired:
                     self._inflight.pop(flight.key, None)
+                    self._unpend(flight)
             if expired:
                 flight.error = DeadlineExceeded(
                     "expired while queued (admission backlog)")
                 flight.done.set()
                 continue
+            if flight.param is not None and flight.trace is None:
+                self._run_batch(flight)
+                continue
+            if flight.trace is not None:
+                # forced traces never batch; record the (empty) assembly
+                # phase so traced and batched timelines stay comparable
+                t_asm = time.perf_counter()
+                flight.trace.add("batch_assemble",
+                                 time.perf_counter() - t_asm, batch=1)
             err: Exception | None = None
             result = None
             try:
@@ -240,6 +296,86 @@ class Scheduler:
                 self._inflight.pop(flight.key, None)
             flight.result, flight.error = result, err
             flight.done.set()
+
+    # ----------------------------------------------------------- batching
+    def _unpend(self, flight: _Flight) -> None:
+        """Drop a flight from its batch-pending list (caller holds lock)."""
+        if flight.bkey is None:
+            return
+        pend = self._pending.get(flight.bkey)
+        if pend is not None:
+            try:
+                pend.remove(flight)
+            except ValueError:
+                pass
+            if not pend:
+                self._pending.pop(flight.bkey, None)
+
+    def _claim_peers(self, leader: _Flight, n: int) -> list[_Flight]:
+        """Claim up to ``n`` queued same-shape peers (caller holds lock).
+        Expired peers found along the way are failed in place."""
+        pend = self._pending.get(leader.bkey)
+        if not pend or n <= 0:
+            return []
+        now = time.monotonic()
+        taken: list[_Flight] = []
+        kept: list[_Flight] = []
+        for f in pend:
+            if f is leader or f.claimed:
+                continue
+            if now > f.deadline:
+                f.claimed = True
+                self._inflight.pop(f.key, None)
+                f.error = DeadlineExceeded(
+                    "expired while queued (admission backlog)")
+                f.done.set()
+            elif len(taken) < n:
+                f.claimed = True
+                taken.append(f)
+            else:
+                kept.append(f)
+        if kept:
+            self._pending[leader.bkey] = kept
+        else:
+            self._pending.pop(leader.bkey, None)
+        return taken
+
+    def _run_batch(self, leader: _Flight) -> None:
+        """Lead a same-shape batch: claim queued peers, answer the whole
+        batch via ``registry.execute_canonical_batch`` (one vmapped device
+        launch when the shape parameterizes), fan results back out."""
+        batch = [leader]
+        with self._lock:
+            self._unpend(leader)
+            batch += self._claim_peers(leader, self.batch_max - 1)
+        if len(batch) < self.batch_max and self.batch_window_s > 0:
+            # micro-deadline: hold an under-full batch briefly so arrivals
+            # still in the parse/fingerprint stage can join — batching
+            # amortizes so steeply that a few ms of queueing is repaid
+            # whenever there is any same-shape pressure at all
+            time.sleep(min(self.batch_window_s,
+                           max(0.0, leader.deadline - time.monotonic())))
+            with self._lock:
+                batch += self._claim_peers(leader,
+                                           self.batch_max - len(batch))
+        try:
+            out = self.registry.execute_canonical_batch(
+                leader.dataset, [f.param for f in batch], leader.version)
+            if len(out) != len(batch):
+                raise SchedulerError(
+                    f"registry returned {len(out)} results for a batch "
+                    f"of {len(batch)}")
+        except Exception as e:  # noqa: BLE001 — fan the error out
+            out = [e] * len(batch)
+        with self._lock:
+            for f in batch:
+                self._inflight.pop(f.key, None)
+        for f, r in zip(batch, out):
+            if isinstance(r, Exception):
+                f.error = r
+            else:
+                f.result = r
+            f.done.set()
 
     # -------------------------------------------------------------- stats
     def snapshot(self) -> dict:

@@ -123,6 +123,7 @@ class DatasetRegistry:
         with self._lock:
             self._datasets[name] = ds
         self.metrics.attach_cache_gauges(name, plan_cache, result_cache)
+        self.metrics.attach_param_family_gauge(name, engine)
         return ds
 
     def get(self, name: str) -> HostedDataset:
@@ -270,6 +271,64 @@ class DatasetRegistry:
         elif ds.result_cache.enabled and version == ds.version:
             ds.result_cache.put(key, res)
         return res
+
+    def execute_canonical_batch(self, name: str, pqs, version: int) -> list:
+        """Answer a same-shape batch in one parameterized dispatch
+        (scheduler batch-leader entry point).
+
+        ``pqs`` is a list of :class:`~repro.serve.fingerprint.ParamQuery`
+        sharing one shape; the shape compiles once
+        (:meth:`~repro.core.sparql_exec.SparqlEngine.compile_param`) and
+        the members execute as one vmapped launch.  Returns one
+        ``QueryResult | Exception`` per member, in order, with canonical
+        variable names (the scheduler restores each caller's).  Each
+        member still probes the result cache under its own exact
+        ``(fingerprint, version)`` key — the canonical fingerprint covers
+        shape *and* constants, so this is the per-(shape, constants,
+        graph_version) keying the batch path needs.  Shapes that cannot
+        be parameterized fall back to per-member
+        :meth:`execute_canonical`."""
+        ds = self.get(name)
+        self.metrics.batch_size.observe(len(pqs))
+        if len(pqs) >= 2:
+            self.metrics.coalesced_queries.inc(len(pqs))
+        out: list = [None] * len(pqs)
+        family = ds.engine.compile_param(pqs[0])
+        if family is None:
+            for i, pq in enumerate(pqs):
+                try:
+                    out[i] = self.execute_canonical(name, pq.canon, version)
+                except Exception as e:  # noqa: BLE001 — per-member fan-out
+                    out[i] = e
+            return out
+        todo: list[int] = []
+        for i, pq in enumerate(pqs):
+            if ds.result_cache.enabled:
+                hit = ds.result_cache.get((pq.canon.fingerprint, version))
+                if hit is not None:
+                    out[i] = hit
+                    continue
+            todo.append(i)
+        if not todo:
+            return out
+        try:
+            results = ds.engine.execute_param_batch(
+                family, [pqs[i].consts for i in todo])
+        except Exception as e:  # noqa: BLE001 — fail the executed members
+            for i in todo:
+                out[i] = e
+            return out
+        for i, res in zip(todo, results):
+            pq = pqs[i]
+            # shape-canonical -> caller-original -> exact-canonical names
+            names = [pq.canon.rename.get(v, v)
+                     for v in pq.restore(res.variables)]
+            r = QueryResult(names, res.rows, list(res.kinds),
+                            count=res.count, stats=dict(res.stats))
+            out[i] = r
+            if ds.result_cache.enabled and version == ds.version:
+                ds.result_cache.put((pq.canon.fingerprint, version), r)
+        return out
 
     def execute(self, name: str, sparql: str) -> QueryResult:
         """Scheduler-less convenience path (tests, CLIs)."""

@@ -283,11 +283,13 @@ def test_check_exec_missing_query_is_regression():
 
 
 def test_check_store_speedup_ratio():
+    # store's floor is widened to 60% (quick-scale ingest ratios are
+    # noisy) — a halved ratio passes, an order-of-magnitude loss gates
     base = {"speedup_ingest": 20.0, "speedup_wall": 1.1}
     assert check.compare("update", base,
-                         {"speedup_ingest": 18.0, "speedup_wall": 1.1}) == []
+                         {"speedup_ingest": 10.0, "speedup_wall": 1.1}) == []
     bad = check.compare("update", base,
-                        {"speedup_ingest": 10.0, "speedup_wall": 1.1})
+                        {"speedup_ingest": 2.0, "speedup_wall": 1.1})
     assert bad and "speedup_ingest" in bad[0]
 
 
