@@ -60,6 +60,15 @@ from repro.core.planner import ExecPlan, Step
 from repro.core.planner.ir import _next_pow2
 from repro.kernels import ops as kops
 from repro.rdf.graph import LabeledGraph
+from repro.resilience import faults as _faults
+from repro.resilience.cancel import CancelToken, QueryCancelled
+from repro.resilience.policy import (
+    MAX_LEVEL,
+    DegradationBreaker,
+    RetryPolicy,
+    degrade_opts,
+    is_transient_fault,
+)
 from repro.utils import get_logger
 
 log = get_logger("core.exec")
@@ -216,6 +225,10 @@ class ExecOpts:
     cap_slack: float = 1.0  # schedule headroom (pow2 rounding adds ~1.5x already)
     use_prune: bool = True  # neighborhood-signature pruning (repro.index)
     profile: bool = False  # per-step wall-time stats (adds host syncs)
+    # absolute time.monotonic() deadline; checked between chunk dispatches
+    # and suffix-resume re-entries (None = no deadline).  Deliberately
+    # excluded from key(): deadlines never affect compiled programs.
+    deadline: float | None = None
 
     def key(self) -> tuple:
         return (self.semantics, self.use_int, self.use_nlf, self.use_deg,
@@ -872,8 +885,18 @@ class Executor:
     against the current snapshot — which also makes *cached plans* built
     against an older version execute correctly."""
 
-    def __init__(self, g, opts: ExecOpts | None = None):
+    def __init__(self, g, opts: ExecOpts | None = None, *,
+                 policy: RetryPolicy | None = None,
+                 breaker: DegradationBreaker | None = None):
         self.opts = opts or ExecOpts()
+        # transient-fault policy + per-plan-signature degradation breaker;
+        # callers rebuilding an executor (e.g. engine compaction) pass the
+        # old instances through so learned degradations survive
+        self._policy = policy or RetryPolicy.from_env()
+        self._breaker = breaker or DegradationBreaker(
+            cooldown_s=self._policy.cooldown_s)
+        self._res_counters = {"degraded_runs": 0, "fault_retries": 0,
+                              "escalations": 0}
         if getattr(g, "is_snapshot", False):
             view = g
             self.graph = g.base
@@ -925,6 +948,20 @@ class Executor:
                            snap, with_nlf=self.opts.use_nlf,
                            with_prune=self.opts.use_prune))
 
+    @property
+    def policy(self) -> RetryPolicy:
+        return self._policy
+
+    @property
+    def breaker(self) -> DegradationBreaker:
+        return self._breaker
+
+    def resilience_snapshot(self) -> dict:
+        """Breaker state + fault counters, for /healthz and gauges."""
+        d = self._breaker.snapshot()
+        d.update(self._res_counters)
+        return d
+
     def _get_fn(self, plan: ExecPlan, caps: tuple[int, ...], n_in: int,
                 table_input: bool, collect: str, start: int, stop: int,
                 dg: DeviceGraph | None = None, opts: ExecOpts | None = None):
@@ -938,6 +975,7 @@ class Executor:
         fn = self._compiled.get(key)
         fresh = fn is None
         if fresh:
+            _faults.fire("compile")
             raw = build_chunk_fn(dg, plan, caps, n_in, opts,
                                  table_input, collect, start, stop)
             out_cap = caps[stop - 1] if stop > start else n_in
@@ -983,6 +1021,7 @@ class Executor:
         cached = getattr(plan, "_dev_arrays_snap", None)
         if cached is not None and cached[0] == token:
             return cached[1]
+        _faults.fire("delta_merge")
         n_pad = dg.pad_vertices
         cm = CostModel(snap)
         flat_cache: dict[bool, jax.Array] = {}
@@ -1119,7 +1158,10 @@ class Executor:
                   opts: ExecOpts | None = None) -> tuple[tuple, list[int]]:
         """The (learned) per-step capacity schedule for this plan+chunk."""
         opts = self.opts if opts is None else opts
-        key = (plan.signature(), chunk_size, bool(opts.cap_schedule))
+        # cap_slack/init_cap are in the key so degraded-ladder runs learn
+        # their own schedules instead of polluting the normal path's
+        key = (plan.signature(), chunk_size, bool(opts.cap_schedule),
+               opts.cap_slack, opts.init_cap)
         caps = self._caps_cache.get(key)
         if caps is None:
             if opts.cap_schedule:
@@ -1148,6 +1190,7 @@ class Executor:
         state: tuple | None = None,
         trace=None,
         params: np.ndarray | None = None,
+        cancel: CancelToken | None = None,
         _opts_override: ExecOpts | None = None,
     ) -> Result:
         """Execute a plan.  ``initial=(B0, P0, origins)`` runs the plan's
@@ -1162,7 +1205,80 @@ class Executor:
         step spans carry real device wall times.  ``params`` supplies a
         parameterized plan's constant vector (int32 ``[plan.n_params]``);
         a negative entry means the constant is absent from the dictionary
-        and short-circuits to an empty result."""
+        and short-circuits to an empty result.  ``cancel`` (a
+        :class:`repro.resilience.CancelToken`) is polled between chunk
+        dispatches and suffix-resume re-entries; an expired or cancelled
+        token raises :class:`QueryCancelled` with partial stats.
+
+        Transient faults (RESOURCE_EXHAUSTED-shaped) are absorbed by a
+        retry/degradation ladder: bounded backoff retries at the current
+        config, then progressively degraded configs down to the legacy
+        executor, with the working level remembered per plan signature
+        (see :mod:`repro.resilience.policy`).  Runs are pure with respect
+        to their host inputs, so a ladder re-run is exact."""
+        if cancel is None and self.opts.deadline is not None:
+            cancel = CancelToken(self.opts.deadline)
+        if _opts_override is not None:
+            # explicit config (small-plan probes, degraded re-runs):
+            # bypass the ladder so probe timings stay undistorted
+            return self._run_impl(plan, collect, initial, profile, state,
+                                  trace, params, cancel, _opts_override)
+        sig = plan.signature()
+        policy = self._policy
+        level = self._breaker.level(sig)
+        attempt = 0
+        while True:
+            try:
+                res = self._run_impl(
+                    plan, collect, initial, profile, state, trace, params,
+                    cancel, degrade_opts(self.opts, level) if level else None)
+            except QueryCancelled:
+                raise
+            except Exception as e:  # noqa: BLE001 - filtered just below
+                if not is_transient_fault(e):
+                    raise
+                self._res_counters["fault_retries"] += 1
+                if attempt < policy.max_retries:
+                    delay = policy.backoff(attempt)
+                    attempt += 1
+                    if cancel is not None:
+                        if cancel.expired:
+                            raise QueryCancelled(
+                                f"query cancelled: "
+                                f"{cancel.reason or 'cancelled'}") from e
+                        rem = cancel.remaining()
+                        if rem is not None:
+                            delay = min(delay, max(0.0, rem))
+                    time.sleep(delay)
+                    continue
+                if level >= MAX_LEVEL:
+                    raise
+                prev = level
+                level = self._breaker.record_failure(sig, level)
+                self._res_counters["escalations"] += 1
+                attempt = 0
+                log.warning(
+                    "transient fault at degradation level %d; "
+                    "escalating to level %d: %s", prev, level, e)
+                continue
+            self._breaker.record_success(sig, level)
+            if level:
+                self._res_counters["degraded_runs"] += 1
+                res.stats["degraded_level"] = level
+            return res
+
+    def _run_impl(
+        self,
+        plan: ExecPlan,
+        collect: str = "bindings",
+        initial: tuple[np.ndarray, np.ndarray, np.ndarray] | None = None,
+        profile: bool | None = None,
+        state: tuple | None = None,
+        trace=None,
+        params: np.ndarray | None = None,
+        cancel: CancelToken | None = None,
+        _opts_override: ExecOpts | None = None,
+    ) -> Result:
         state = self.pin() if state is None else state
         view, dg = state
         if plan.unsat:
@@ -1198,7 +1314,8 @@ class Executor:
                 legacy = replace(opts, cap_schedule=False,
                                  suffix_resume=False, async_chunks=1,
                                  use_fused=False)
-                kw = dict(collect=collect, state=state, params=params)
+                kw = dict(collect=collect, state=state, params=params,
+                          cancel=cancel)
                 res = self.run(plan, _opts_override=opts, **kw)
                 t0 = time.perf_counter()
                 res = self.run(plan, _opts_override=opts, **kw)
@@ -1259,6 +1376,14 @@ class Executor:
         n_steps = len(plan.steps)
         npv = max(1, plan.n_pvars)
         stats = _empty_stats(n_steps)
+
+        def check_cancel() -> None:
+            if cancel is not None and cancel.expired:
+                stats["wall_ms"] = (time.perf_counter() - t_run0) * 1e3
+                raise QueryCancelled(
+                    f"query cancelled: {cancel.reason or 'cancelled'}",
+                    partial_stats=dict(stats))
+
         if profile:
             stats["step_wall_ms"] = [0.0] * n_steps
         total = 0
@@ -1290,12 +1415,20 @@ class Executor:
             named ``compile`` when this call triggers the first-dispatch
             XLA compile (jit compiles synchronously inside the call) and
             ``dispatch`` when it only enqueues the async chunk."""
+            poison = _faults.fire("dispatch")
             if fresh:
                 stats["compiles"] += 1
             if trace is None:
-                return fn(*args)
-            with trace.span("compile" if fresh else "dispatch", **meta):
-                return fn(*args)
+                out = fn(*args)
+            else:
+                with trace.span("compile" if fresh else "dispatch", **meta):
+                    out = fn(*args)
+            if poison:
+                # injected silent corruption: zero this chunk's count so
+                # end-to-end checks can detect a poisoned dispatch
+                stats["poisoned"] = stats.get("poisoned", 0) + 1
+                out = (*out[:3], out[3] * 0, *out[4:])
+            return out
 
         def dispatch(offset: int, hi: int) -> dict:
             args = host_args(offset, hi)
@@ -1346,6 +1479,9 @@ class Executor:
                 acc_from = max(acc_from, min(ovf, n_steps))
                 if ovf >= n_steps:
                     break
+                # overflow retry is a fresh dispatch: honor an expired
+                # deadline before re-entering the plan
+                check_cancel()
                 stats["step_retries"][ovf] += 1
                 if opts.suffix_resume:
                     # re-enter from the overflowing step only: the frozen
@@ -1399,12 +1535,13 @@ class Executor:
         max_inflight = max(1, int(opts.async_chunks))
         offset = 0
         while offset < n_src:
+            check_cancel()
             hi = min(offset + chunk_size, n_src)
             if profile and n_steps:
                 self._run_profiled_chunk(plan, sarrs, offset, hi, chunk_size,
                                          extension, collect, caps_key, stats,
                                          host_args, drain, dg, trace,
-                                         params_dev, opts)
+                                         params_dev, opts, check_cancel)
             else:
                 pending.append(dispatch(offset, hi))
                 if len(pending) >= max_inflight:
@@ -1429,7 +1566,8 @@ class Executor:
 
     def run_batch(self, plan: ExecPlan, params_mat: np.ndarray,
                   collect: str = "bindings",
-                  state: tuple | None = None) -> list[Result]:
+                  state: tuple | None = None,
+                  cancel: CancelToken | None = None) -> list[Result]:
         """Answer ``B`` same-shape queries in one device launch.
 
         ``params_mat`` (int32 ``[B, plan.n_params]``) stacks one constant
@@ -1468,7 +1606,8 @@ class Executor:
         if not plan.steps or plan.n_params == 0 or B == 1:
             # degenerate shapes: nothing to amortize, reuse the single path
             return [self.run(plan, collect=collect, state=state,
-                             params=params_mat[i]) for i in range(B)]
+                             params=params_mat[i], cancel=cancel)
+                    for i in range(B)]
 
         opts = replace(self.opts, use_fused=False, async_chunks=1)
         per_lane_start = plan.start_param_slot >= 0
@@ -1496,7 +1635,8 @@ class Executor:
                 # multi-chunk start sets: per-lane accumulation across
                 # chunks loses the one-launch win anyway — run sequentially
                 return [self.run(plan, collect=collect, state=state,
-                                 params=params_mat[i]) for i in range(B)]
+                                 params=params_mat[i], cancel=cancel)
+                        for i in range(B)]
             chunk_size = n_src
             for i in range(B):
                 if (params_mat[i] < 0).any():
@@ -1547,9 +1687,25 @@ class Executor:
         else:
             chunk_in = jnp.asarray(start_cands)
             count_in = jnp.int32(n_src)
-        b, p, org, count, ovf_step, *_ = fn(chunk_in, count_in, p0, o0,
-                                            pmat, sarrs)
+        if cancel is not None and cancel.expired:
+            raise QueryCancelled(
+                f"query cancelled: {cancel.reason or 'cancelled'}")
+        try:
+            poison = _faults.fire("dispatch")
+            b, p, org, count, ovf_step, *_ = fn(chunk_in, count_in, p0, o0,
+                                                pmat, sarrs)
+        except Exception as e:  # noqa: BLE001 - filtered just below
+            if not is_transient_fault(e):
+                raise
+            # batched dispatch hit memory pressure: fall back to the
+            # sequential path, whose per-run ladder absorbs the fault
+            return [results[i] if results[i] is not None
+                    else self.run(plan, collect=collect, state=state,
+                                  params=params_mat[i], cancel=cancel)
+                    for i in range(B)]
         count_h = np.asarray(count)
+        if poison:
+            count_h = np.zeros_like(count_h)
         ovf_h = np.asarray(ovf_step)
         b_h = np.asarray(b) if collect == "bindings" else None
         p_h = np.asarray(p) if collect == "bindings" else None
@@ -1560,7 +1716,7 @@ class Executor:
                 # doubling is deterministic, so the answer is identical to
                 # a lane that had fit
                 results[qi] = self.run(plan, collect=collect, state=state,
-                                       params=params_mat[qi])
+                                       params=params_mat[qi], cancel=cancel)
                 continue
             c = int(count_h[li])
             stats = _empty_stats(n_steps)
@@ -1579,7 +1735,8 @@ class Executor:
                             extension, collect, caps_key, stats, host_args,
                             drain, dg: DeviceGraph | None = None,
                             trace=None, params_dev=None,
-                            opts: ExecOpts | None = None) -> None:
+                            opts: ExecOpts | None = None,
+                            check_cancel=None) -> None:
         """Step-at-a-time execution of one chunk with host syncs, filling
         per-step wall times; overflow handling is inherently suffix-resume
         (each window re-runs alone with a doubled capacity)."""
@@ -1594,6 +1751,8 @@ class Executor:
         stats["chunks"] += 1
         for si in range(n_steps):
             while True:
+                if check_cancel is not None:
+                    check_cancel()
                 used = tuple(caps)
                 n_in = chunk_size if si == 0 else used[si - 1]
                 fn, fresh = self._get_fn(plan, used, n_in,
@@ -1606,6 +1765,7 @@ class Executor:
                            if trace is not None else None)
                 if span_cm is not None:
                     span_cm.__enter__()
+                poison = _faults.fire("dispatch")
                 t0 = time.perf_counter()
                 if si == 0:
                     out = fn(*args, params_dev, sarrs)
@@ -1613,6 +1773,9 @@ class Executor:
                     b, p, org, count = state
                     out = fn(b[:n_in], count, p[:n_in], org[:n_in],
                              params_dev, sarrs)
+                if poison:
+                    stats["poisoned"] = stats.get("poisoned", 0) + 1
+                    out = (*out[:3], out[3] * 0, *out[4:])
                 jax.block_until_ready(out)
                 if span_cm is not None:
                     span_cm.__exit__(None, None, None)

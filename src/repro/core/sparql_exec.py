@@ -35,6 +35,7 @@ import numpy as np
 from repro.core.exec import ExecOpts, Executor, Result
 from repro.core.planner import ExecPlan, build_plan, explain_plan, np_cmp
 from repro.core.query import QueryGraph, build_query_graph
+from repro.resilience.cancel import CancelToken, QueryCancelled
 from repro.rdf.sparql import (Comparison, GroupPattern, Literal, Regex,
                               SelectQuery, Var, parse_sparql)
 from repro.rdf.transform import TransformMaps
@@ -233,7 +234,12 @@ class SparqlEngine:
                 and g.base is self.executor.graph):
             self.executor.set_snapshot(g)
         else:
-            self.executor = Executor(g, self.opts)
+            # carry the retry policy and learned degradation levels across
+            # the rebuild (plan signatures are structural, so they remain
+            # valid keys against the new graph state)
+            prev = self.executor
+            self.executor = Executor(g, self.opts, policy=prev.policy,
+                                     breaker=prev.breaker)
 
     def compile(self, source: str | SelectQuery, trace=None):
         """Canonicalize + compile through the plan cache.
@@ -372,7 +378,8 @@ class SparqlEngine:
         return out
 
     def execute_param(self, family: ParamFamily, consts,
-                      collect: str = "bindings", trace=None) -> QueryResult:
+                      collect: str = "bindings", trace=None,
+                      cancel: CancelToken | None = None) -> QueryResult:
         """Run one family member: resolve its constant vector and execute
         the shared parameterized plan.  Result columns carry the shape's
         canonical variable names (callers rename back)."""
@@ -384,7 +391,7 @@ class SparqlEngine:
         with _maybe_span(trace, "execute", branches=1):
             res = executor.run(
                 family.plan, collect="count" if count_only else "bindings",
-                state=state, trace=trace, params=params)
+                state=state, trace=trace, params=params, cancel=cancel)
         if count_only:
             return QueryResult(
                 list(family.variables),
@@ -395,14 +402,17 @@ class SparqlEngine:
         return self._finish_param(family, res)
 
     def execute_param_batch(self, family: ParamFamily, const_rows,
-                            collect: str = "bindings") -> list[QueryResult]:
+                            collect: str = "bindings",
+                            cancel: CancelToken | None = None,
+                            ) -> list[QueryResult]:
         """Answer ``B`` members of one family in a single vmapped device
         launch (:meth:`Executor.run_batch`); each result is bit-identical
         to what per-member :meth:`execute_param` would return."""
         if not const_rows:
             return []
         if len(const_rows) == 1:
-            return [self.execute_param(family, const_rows[0], collect)]
+            return [self.execute_param(family, const_rows[0], collect,
+                                       cancel=cancel)]
         executor = self.executor
         state = executor.pin()
         mat = np.stack([self.resolve_params(c) for c in const_rows])
@@ -410,7 +420,7 @@ class SparqlEngine:
                       and not family.has_modifiers)
         results = executor.run_batch(
             family.plan, mat, collect="count" if count_only else "bindings",
-            state=state)
+            state=state, cancel=cancel)
         out: list[QueryResult] = []
         for res in results:
             if count_only:
@@ -456,7 +466,8 @@ class SparqlEngine:
 
     def execute_compiled(self, compiled: CompiledQuery,
                          collect: str = "bindings",
-                         profile: bool = False, trace=None) -> QueryResult:
+                         profile: bool = False, trace=None,
+                         cancel: CancelToken | None = None) -> QueryResult:
         """Run a compiled query; result columns keep its variable names.
 
         ``collect="count"`` lets branches without OPTIONALs, post-hoc
@@ -468,7 +479,10 @@ class SparqlEngine:
         ``profile=True`` executes with per-step host syncs to fill
         per-step wall times in the stats.  ``trace`` records an
         ``execute`` span with per-branch / per-chunk / per-step children;
-        a forced trace (``profile_steps=True``) implies ``profile``."""
+        a forced trace (``profile_steps=True``) implies ``profile``.
+        ``cancel`` (a :class:`repro.resilience.CancelToken`) is threaded
+        into every executor run and checked between branches; on expiry a
+        :class:`QueryCancelled` carries the stats accumulated so far."""
         if trace is not None and trace.profile_steps:
             profile = True
         all_rows: list[np.ndarray] = []
@@ -486,10 +500,20 @@ class SparqlEngine:
         state = executor.pin()
         with _maybe_span(trace, "execute", branches=len(compiled.branches)):
             for bi, br in enumerate(compiled.branches):
-                with _maybe_span(trace, "branch", index=bi):
-                    rows, count, info = self._exec_branch(
-                        br, collect if not modifiers else "bindings",
-                        profile, executor, state, trace)
+                if cancel is not None:
+                    cancel.check({"exec": {"branches": exec_stats}})
+                try:
+                    with _maybe_span(trace, "branch", index=bi):
+                        rows, count, info = self._exec_branch(
+                            br, collect if not modifiers else "bindings",
+                            profile, executor, state, trace, cancel)
+                except QueryCancelled as e:
+                    # enrich with the completed branches' stats so the 504
+                    # body can report partial progress
+                    e.partial_stats = {
+                        "exec": {"branches": exec_stats
+                                 + [{"base": e.partial_stats}]}}
+                    raise
                 total += count
                 exec_stats.append(info)
                 base = info.get("base") or {}
@@ -520,23 +544,37 @@ class SparqlEngine:
                                   "step_card": step_card})
 
     def query(self, sparql: str, collect: str = "bindings",
-              trace=False) -> QueryResult:
+              trace=False, timeout_ms: float | None = None,
+              cancel: CancelToken | None = None) -> QueryResult:
         """Evaluate a SPARQL string.  ``trace=True`` forces a full trace
         (profiled steps) and attaches the finished span tree as
         ``result.stats["trace"]``; a :class:`repro.obs.Trace` instance may
-        also be passed to record into an existing trace."""
+        also be passed to record into an existing trace.  ``timeout_ms``
+        sets a deadline for this call (raising
+        :class:`repro.resilience.QueryCancelled` on expiry); ``cancel``
+        passes an externally owned token instead."""
         t = _as_trace(trace)
         if t is None:
-            return self.query_ast(parse_sparql(sparql), collect=collect)
+            return self.query_ast(parse_sparql(sparql), collect=collect,
+                                  timeout_ms=timeout_ms, cancel=cancel)
         with t.span("parse"):
             ast = parse_sparql(sparql)
-        return self.query_ast(ast, collect=collect, trace=t)
+        return self.query_ast(ast, collect=collect, trace=t,
+                              timeout_ms=timeout_ms, cancel=cancel)
 
     def query_ast(self, ast: SelectQuery, collect: str = "bindings",
-                  trace=False) -> QueryResult:
+                  trace=False, timeout_ms: float | None = None,
+                  cancel: CancelToken | None = None) -> QueryResult:
+        import time as _time
+
+        if cancel is None and timeout_ms is not None:
+            cancel = CancelToken(_time.monotonic() + timeout_ms / 1e3)
         t = _as_trace(trace)
         compiled, canon = self.compile(ast, trace=t)
-        res = self.execute_compiled(compiled, collect=collect, trace=t)
+        if cancel is not None:
+            cancel.check()  # deadline may have expired during plan search
+        res = self.execute_compiled(compiled, collect=collect, trace=t,
+                                    cancel=cancel)
         res.variables = canon.restore(res.variables)
         if t is not None:
             t.finish()
@@ -689,14 +727,15 @@ class SparqlEngine:
     # ------------------------------------------------------------ execution
     def _exec_branch(self, br: CompiledBranch, collect: str = "bindings",
                      profile: bool = False, executor=None,
-                     state: tuple | None = None, trace=None):
+                     state: tuple | None = None, trace=None,
+                     cancel: CancelToken | None = None):
         """Run one branch; returns ``(rows | None, count, exec_stats)``."""
         executor = self.executor if executor is None else executor
         count_only = (collect == "count" and not br.optionals
                       and not br.expensive)
         res = executor.run(
             br.plan, collect="count" if count_only else "bindings",
-            profile=profile, state=state, trace=trace)
+            profile=profile, state=state, trace=trace, cancel=cancel)
         info: dict = {"base": res.stats}
         if count_only:
             return None, res.count, info
@@ -708,7 +747,8 @@ class SparqlEngine:
             with _maybe_span(trace, "optional", index=oi):
                 table, ptable, ost = self._exec_left_join(table, ptable, co,
                                                           profile, executor,
-                                                          state, trace)
+                                                          state, trace,
+                                                          cancel)
             opt_stats.append(ost)
         if opt_stats:
             info["optionals"] = opt_stats
@@ -748,7 +788,7 @@ class SparqlEngine:
     def _exec_left_join(self, table: np.ndarray, ptable: np.ndarray,
                         co: CompiledOptional, profile: bool = False,
                         executor=None, state: tuple | None = None,
-                        trace=None):
+                        trace=None, cancel: CancelToken | None = None):
         """Left-outer join a compiled OPTIONAL extension onto the table."""
         q_ext, plan, expensive = co.q_ext, co.plan, co.expensive
         nq_ext = q_ext.n_vertices
@@ -764,7 +804,8 @@ class SparqlEngine:
         else:
             executor = self.executor if executor is None else executor
             matched = executor.run(plan, initial=(b0, p0, org0),
-                                   profile=profile, state=state, trace=trace)
+                                   profile=profile, state=state, trace=trace,
+                                   cancel=cancel)
         mt, mp, morg = self._apply_expensive(matched.bindings,
                                              matched.pvar_bindings,
                                              q_ext, expensive,

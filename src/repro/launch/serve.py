@@ -217,7 +217,46 @@ def main(argv=None) -> None:
                          "/update (SPARQL INSERT DATA / DELETE DATA) works")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8080)
+    res = ap.add_argument_group(
+        "resilience", "fault injection + degraded-mode execution knobs "
+        "(see README 'Resilience')")
+    res.add_argument("--fault-spec", default=None, metavar="SPEC",
+                     help="deterministic fault injection, e.g. "
+                          "'dispatch:oom:0.05;compile:latency:0.1:20' — "
+                          "site:kind[:rate[:latency_ms]] entries joined "
+                          "with ';' (sites: compile, dispatch, delta_merge, "
+                          "store_commit; kinds: oom, compile_error, latency, "
+                          "poison)")
+    res.add_argument("--fault-seed", type=int, default=0,
+                     help="seed for the per-spec fault RNG streams (same "
+                          "seed + spec + request order => same faults)")
+    res.add_argument("--retry-max", type=int, default=None,
+                     help="transient-fault retries per degradation level "
+                          "before escalating (default 2)")
+    res.add_argument("--retry-backoff-ms", type=float, default=None,
+                     help="base backoff between transient-fault retries, "
+                          "doubled per attempt (default 5ms)")
+    res.add_argument("--breaker-cooldown-s", type=float, default=None,
+                     help="how long a plan stays at its degraded level "
+                          "before re-probing one level lower (default 30s)")
     args = ap.parse_args(argv)
+
+    # retry/breaker knobs travel via env so every engine the registry
+    # builds (RetryPolicy.from_env) picks them up without plumbing
+    import os
+
+    if args.retry_max is not None:
+        os.environ["REPRO_RETRY_MAX"] = str(args.retry_max)
+    if args.retry_backoff_ms is not None:
+        os.environ["REPRO_RETRY_BACKOFF_MS"] = str(args.retry_backoff_ms)
+    if args.breaker_cooldown_s is not None:
+        os.environ["REPRO_BREAKER_COOLDOWN_S"] = str(args.breaker_cooldown_s)
+    if args.fault_spec:
+        from repro.resilience import faults
+        faults.install(faults.FaultInjector(
+            faults.parse_fault_spec(args.fault_spec), seed=args.fault_seed))
+        log.warning("fault injection active: %s (seed=%d)",
+                    args.fault_spec, args.fault_seed)
 
     for ds in args.dataset.split(","):
         if ds.strip() not in WORKLOADS:

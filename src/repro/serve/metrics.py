@@ -362,6 +362,14 @@ class ServeMetrics:
             "repro_coalesced_queries_total",
             "queries answered via same-shape batched dispatch (lanes of "
             "batches with size >= 2)")
+        self.cancelled = r.counter(
+            "repro_cancelled_total",
+            "executions stopped cooperatively (deadline expiry, waiter "
+            "abandonment, or shutdown) after starting on the device")
+        self.degraded = r.counter(
+            "repro_degraded_dispatch_total",
+            "query executions that completed at a degraded ladder level "
+            "after transient faults (OOM/compile failure)")
         self._completions: deque[float] = deque(maxlen=65536)
         self._started = time.monotonic()
         self._lock = threading.Lock()
@@ -444,11 +452,34 @@ class ServeMetrics:
                 f"param-family plan-cache hit ratio for dataset {dataset}",
                 fn=lambda e=engine: e.param_stats.hit_rate)
 
+    def attach_breaker_gauges(self, dataset: str, engine) -> None:
+        """Expose an engine executor's degradation-breaker state (plans
+        currently pinned to a degraded ladder level) as render-time gauges,
+        like :meth:`attach_cache_gauges`."""
+        r = self.registry
+
+        def snap(e=engine):
+            try:
+                return e.executor.resilience_snapshot()
+            except Exception:  # noqa: BLE001 — gauges must never raise
+                return {}
+
+        r.gauge(f"repro_degraded_plans_{dataset}",
+                f"plans running at a degraded ladder level for {dataset}",
+                fn=lambda: snap().get("degraded_plans", 0))
+        r.gauge(f"repro_degraded_max_level_{dataset}",
+                f"highest active degradation ladder level for {dataset}",
+                fn=lambda: snap().get("max_level", 0))
+
     def summary(self) -> dict:
         out = {"requests": self.requests.total(),
                "coalesced": self.coalesced.total(),
                "qps": round(self._qps(), 2),
                **self.latency.summary()}
+        if self.cancelled.total():
+            out["cancelled"] = self.cancelled.total()
+        if self.degraded.total():
+            out["degraded"] = self.degraded.total()
         if self.plan_search.count:
             out["plan_search_p50_ms"] = self.plan_search.percentile(50)
         if self.card_error.count:

@@ -35,6 +35,7 @@ from dataclasses import dataclass, field
 
 from repro.core.sparql_exec import QueryResult
 from repro.rdf.sparql import SelectQuery, parse_sparql
+from repro.resilience.cancel import CancelToken, QueryCancelled
 from repro.serve.fingerprint import (CanonicalQuery, ParamQuery,
                                      canonicalize_query, parameterize_query)
 from repro.serve.metrics import ServeMetrics
@@ -53,15 +54,35 @@ class SchedulerError(RuntimeError):
 
 
 class Overloaded(SchedulerError):
-    """Admission control rejected the request (queue full)."""
+    """Admission control rejected the request (queue full).
+
+    ``retry_after_s`` estimates when the queue should have drained enough
+    to accept new work (surfaced as the HTTP ``Retry-After`` header)."""
+
+    def __init__(self, message: str, retry_after_s: float = 1.0) -> None:
+        super().__init__(message)
+        self.retry_after_s = retry_after_s
 
 
 class DeadlineExceeded(SchedulerError):
-    """The request's deadline passed before a result was ready."""
+    """The request's deadline passed before a result was ready.
+
+    ``queue_wait_ms`` / ``exec_ms`` split where the time went (queued vs.
+    executing) so clients can tune their backoff."""
+
+    def __init__(self, message: str, queue_wait_ms: float | None = None,
+                 exec_ms: float | None = None) -> None:
+        super().__init__(message)
+        self.queue_wait_ms = queue_wait_ms
+        self.exec_ms = exec_ms
 
 
 class SchedulerStopped(SchedulerError):
     """submit() called on a scheduler that is not running."""
+
+
+class SchedulerShutdown(SchedulerError):
+    """The scheduler stopped while this flight was still unfinished."""
 
 
 @dataclass
@@ -82,6 +103,19 @@ class _Flight:
     param: ParamQuery | None = None
     bkey: tuple | None = None
     claimed: bool = False
+    # cooperative cancellation: the token travels into the executor's chunk
+    # loop; queue-wait vs. execution timing feeds 504 error bodies
+    cancel: CancelToken = field(default_factory=CancelToken)
+    t_submit: float = 0.0  # monotonic, set at enqueue
+    t_start: float | None = None  # monotonic, set when a worker picks it up
+
+    def timing_ms(self, now: float | None = None) -> tuple[float, float]:
+        """(queue_wait_ms, exec_ms) as of ``now``."""
+        now = time.monotonic() if now is None else now
+        if self.t_start is None:
+            return max(0.0, now - self.t_submit) * 1e3, 0.0
+        return (max(0.0, self.t_start - self.t_submit) * 1e3,
+                max(0.0, now - self.t_start) * 1e3)
 
 
 _SENTINEL = object()
@@ -113,6 +147,23 @@ class Scheduler:
         self.batch_window_s = max(0.0, batch_window_ms) / 1e3
         self._can_batch = (batch_max > 1 and callable(
             getattr(registry, "execute_canonical_batch", None)))
+        # duck-typed registries (tests, custom backends) may not know the
+        # ``cancel`` kwarg — probe the signature once
+        def _accepts_cancel(fn) -> bool:
+            try:
+                import inspect
+
+                return fn is not None and "cancel" in inspect.signature(
+                    fn).parameters
+            except (TypeError, ValueError):
+                return False
+
+        self._reg_accepts_cancel = _accepts_cancel(
+            getattr(registry, "execute_canonical", None))
+        self._batch_accepts_cancel = _accepts_cancel(
+            getattr(registry, "execute_canonical_batch", None))
+        # EMA of execution time, for the Overloaded Retry-After estimate
+        self._ema_exec_ms = 50.0
         self._queue: queue.Queue = queue.Queue()
         self._inflight: dict[tuple, _Flight] = {}
         self._pending: dict[tuple, list[_Flight]] = {}  # bkey -> queued
@@ -136,16 +187,61 @@ class Scheduler:
         return self
 
     def stop(self, wait: bool = True) -> None:
+        """Stop the worker pool.
+
+        Every unfinished flight is failed with :class:`SchedulerShutdown`
+        (waking all its waiters) and in-flight executions are cancelled via
+        their tokens, so no waiter blocks past shutdown.  A worker thread
+        that fails to join (stuck in a non-cooperative call) is *logged* as
+        leaked rather than silently dropped — its flight has already been
+        failed, so nothing waits on it."""
         with self._lock:
             if not self._running:
                 return
             self._running = False
+            inflight = list(self._inflight.values())
+        # cancel running executions first so stuck workers get a chance to
+        # exit at their next chunk boundary before the join deadline
+        for f in inflight:
+            f.cancel.cancel("scheduler shutdown")
+        # fail every unfinished flight *now*: waiters wake immediately with
+        # SchedulerShutdown instead of riding out the worker join below
+        failed = 0
+        with self._lock:
+            for f in list(self._inflight.values()):
+                if not f.done.is_set():
+                    failed += 1
+                self._finish_locked(f, error=SchedulerShutdown(
+                    "scheduler stopped before this flight finished"))
+            self._pending.clear()
         for _ in self._threads:
             self._queue.put(_SENTINEL)
+        leaked: list[str] = []
         if wait:
             for t in self._threads:
                 t.join(timeout=5.0)
+                if t.is_alive():
+                    leaked.append(t.name)
         self._threads.clear()
+        # sweep flights a concurrent submit may have registered between the
+        # _running flip and its queue put
+        with self._lock:
+            remaining = [f for f in self._inflight.values()
+                         if not f.done.is_set()]
+            self._inflight.clear()
+            self._pending.clear()
+        failed += len(remaining)
+        for f in remaining:
+            self._finish(f, error=SchedulerShutdown(
+                "scheduler stopped before this flight finished"))
+        if leaked:
+            log.warning(
+                "scheduler stop: %d worker thread(s) failed to join within "
+                "5s and leaked: %s (their flights were failed with "
+                "SchedulerShutdown)", len(leaked), ", ".join(leaked))
+        if failed:
+            log.info("scheduler stop: failed %d unfinished flight(s) with "
+                     "SchedulerShutdown", failed)
 
     def __enter__(self) -> "Scheduler":
         return self.start()
@@ -203,6 +299,7 @@ class Scheduler:
             if flight is not None and not flight.done.is_set():
                 flight.waiters += 1
                 flight.deadline = max(flight.deadline, deadline)
+                flight.cancel.extend(deadline)
                 self.metrics.coalesced.inc()
                 coalesced = True
             else:
@@ -210,9 +307,12 @@ class Scheduler:
                     self.metrics.record(dataset, "overloaded",
                                         (time.perf_counter() - t0) * 1e3)
                     raise Overloaded(
-                        f"queue full ({self.max_queue} flights pending)")
+                        f"queue full ({self.max_queue} flights pending)",
+                        retry_after_s=self.retry_after_s())
                 flight = _Flight(key=key, dataset=dataset, canonical=canon,
-                                 version=version, deadline=deadline, trace=t)
+                                 version=version, deadline=deadline, trace=t,
+                                 cancel=CancelToken(deadline),
+                                 t_submit=time.monotonic())
                 if pq is not None:
                     flight.param = pq
                     flight.bkey = (dataset, pq.shape, version)
@@ -228,12 +328,17 @@ class Scheduler:
             ms = (time.perf_counter() - t0) * 1e3
             if not finished:
                 self.metrics.record(dataset, "timeout", ms)
+                qw, ex = flight.timing_ms()
                 raise DeadlineExceeded(
                     f"no result within {timeout:.3f}s "
-                    f"({'coalesced' if coalesced else 'leader'})")
+                    f"({'coalesced' if coalesced else 'leader'})",
+                    queue_wait_ms=qw, exec_ms=ex)
             if flight.error is not None:
                 status = ("timeout" if isinstance(flight.error,
-                                                  DeadlineExceeded) else "error")
+                                                  DeadlineExceeded)
+                          else "cancelled" if isinstance(flight.error,
+                                                         QueryCancelled)
+                          else "error")
                 self.metrics.record(dataset, status, ms)
                 raise flight.error
             self.metrics.record(dataset, "ok", ms)
@@ -245,6 +350,43 @@ class Scheduler:
         finally:
             self.metrics.inflight.dec()
             self.metrics.dataset_inflight.dec(dataset)
+            with self._lock:
+                flight.waiters -= 1
+                abandoned = flight.waiters <= 0 and not flight.done.is_set()
+            if abandoned:
+                # every waiter is gone (timed out or errored): cancel the
+                # execution so it stops occupying the device
+                flight.cancel.cancel("all waiters abandoned the flight")
+
+    # ----------------------------------------------------------- finalize
+    def _finish_locked(self, flight: _Flight,
+                       result: QueryResult | None = None,
+                       error: Exception | None = None) -> None:
+        """Finalize a flight exactly once (caller holds the lock):
+        de-register it, store the outcome, wake every waiter.  Idempotent —
+        shutdown and a slow worker may race to finish the same flight."""
+        if self._inflight.get(flight.key) is flight:
+            del self._inflight[flight.key]
+        self._unpend(flight)
+        if flight.done.is_set():
+            return
+        flight.result, flight.error = result, error
+        if result is not None and flight.t_start is not None:
+            _, exec_ms = flight.timing_ms()
+            self._ema_exec_ms = 0.8 * self._ema_exec_ms + 0.2 * exec_ms
+        flight.done.set()
+
+    def _finish(self, flight: _Flight, result: QueryResult | None = None,
+                error: Exception | None = None) -> None:
+        with self._lock:
+            self._finish_locked(flight, result=result, error=error)
+
+    def retry_after_s(self) -> float:
+        """Seconds until the queue has likely drained enough to retry:
+        per-worker backlog times the execution-time EMA, clamped to
+        [0.5s, 30s].  Feeds the 503 ``Retry-After`` header."""
+        backlog = self._queue.qsize() / max(1, self._n_workers)
+        return min(30.0, max(0.5, backlog * self._ema_exec_ms / 1e3))
 
     # ------------------------------------------------------------- worker
     def _worker(self) -> None:
@@ -260,42 +402,47 @@ class Scheduler:
             with self._lock:
                 if flight.claimed:
                     continue
-                expired = time.monotonic() > flight.deadline
-                if expired:
-                    self._inflight.pop(flight.key, None)
-                    self._unpend(flight)
-            if expired:
-                flight.error = DeadlineExceeded(
-                    "expired while queued (admission backlog)")
-                flight.done.set()
+                dead = (time.monotonic() > flight.deadline
+                        or flight.cancel.cancelled)
+                if dead:
+                    qw, ex = flight.timing_ms()
+                    self._finish_locked(flight, error=DeadlineExceeded(
+                        "expired while queued (admission backlog)",
+                        queue_wait_ms=qw, exec_ms=ex))
+            if dead:
                 continue
+            flight.t_start = time.monotonic()
             if flight.param is not None and flight.trace is None:
                 self._run_batch(flight)
                 continue
             if flight.trace is not None:
                 # forced traces never batch; record the (empty) assembly
-                # phase so traced and batched timelines stay comparable
+                # phase so batched and solo timelines stay comparable
                 t_asm = time.perf_counter()
                 flight.trace.add("batch_assemble",
                                  time.perf_counter() - t_asm, batch=1)
             err: Exception | None = None
             result = None
             try:
-                # pass trace only when set so duck-typed registries that
-                # don't know the kwarg (tests, custom backends) keep working
+                # pass trace/cancel only when applicable so duck-typed
+                # registries that don't know the kwargs (tests, custom
+                # backends) keep working
+                kwargs = {}
                 if flight.trace is not None:
-                    result = self.registry.execute_canonical(
-                        flight.dataset, flight.canonical, flight.version,
-                        trace=flight.trace)
-                else:
-                    result = self.registry.execute_canonical(
-                        flight.dataset, flight.canonical, flight.version)
+                    kwargs["trace"] = flight.trace
+                if self._reg_accepts_cancel:
+                    kwargs["cancel"] = flight.cancel
+                result = self.registry.execute_canonical(
+                    flight.dataset, flight.canonical, flight.version,
+                    **kwargs)
+            except QueryCancelled as e:
+                self.metrics.cancelled.inc()
+                if e.queue_wait_ms is None:
+                    e.queue_wait_ms, e.exec_ms = flight.timing_ms()
+                err = e
             except Exception as e:  # noqa: BLE001 — fan the error out
                 err = e
-            with self._lock:
-                self._inflight.pop(flight.key, None)
-            flight.result, flight.error = result, err
-            flight.done.set()
+            self._finish(flight, result=result, error=err)
 
     # ----------------------------------------------------------- batching
     def _unpend(self, flight: _Flight) -> None:
@@ -320,15 +467,16 @@ class Scheduler:
         now = time.monotonic()
         taken: list[_Flight] = []
         kept: list[_Flight] = []
-        for f in pend:
+        # copy: _finish_locked on an expired peer unpends it from `pend`
+        for f in list(pend):
             if f is leader or f.claimed:
                 continue
-            if now > f.deadline:
+            if now > f.deadline or f.cancel.cancelled:
                 f.claimed = True
-                self._inflight.pop(f.key, None)
-                f.error = DeadlineExceeded(
-                    "expired while queued (admission backlog)")
-                f.done.set()
+                qw, ex = f.timing_ms(now)
+                self._finish_locked(f, error=DeadlineExceeded(
+                    "expired while queued (admission backlog)",
+                    queue_wait_ms=qw, exec_ms=ex))
             elif len(taken) < n:
                 f.claimed = True
                 taken.append(f)
@@ -358,29 +506,43 @@ class Scheduler:
             with self._lock:
                 batch += self._claim_peers(leader,
                                            self.batch_max - len(batch))
+        now = time.monotonic()
+        for f in batch:
+            if f.t_start is None:
+                f.t_start = now
+        # one token for the whole dispatch: live until the *latest* member
+        # deadline, and cancelled only when every member's token is — a
+        # batch keeps running as long as anyone still wants its answer
+        group = CancelToken(max(f.deadline for f in batch))
         try:
+            kwargs = {"cancel": group} if self._batch_accepts_cancel else {}
             out = self.registry.execute_canonical_batch(
-                leader.dataset, [f.param for f in batch], leader.version)
+                leader.dataset, [f.param for f in batch], leader.version,
+                **kwargs)
             if len(out) != len(batch):
                 raise SchedulerError(
                     f"registry returned {len(out)} results for a batch "
                     f"of {len(batch)}")
+        except QueryCancelled as e:
+            self.metrics.cancelled.inc(len(batch))
+            out = [e] * len(batch)
         except Exception as e:  # noqa: BLE001 — fan the error out
             out = [e] * len(batch)
         with self._lock:
-            for f in batch:
-                self._inflight.pop(f.key, None)
-        for f, r in zip(batch, out):
-            if isinstance(r, Exception):
-                f.error = r
-            else:
-                f.result = r
-            f.done.set()
+            for f, r in zip(batch, out):
+                if isinstance(r, Exception):
+                    self._finish_locked(f, error=r)
+                else:
+                    self._finish_locked(f, result=r)
 
     # -------------------------------------------------------------- stats
     def snapshot(self) -> dict:
         with self._lock:
             inflight = len(self._inflight)
+            alive = sum(1 for t in self._threads if t.is_alive())
         return {"inflight": inflight, "queued": self._queue.qsize(),
-                "workers": self._n_workers, "max_queue": self.max_queue,
+                "workers": self._n_workers, "workers_alive": alive,
+                "running": self._running, "max_queue": self.max_queue,
+                "retry_after_s": round(self.retry_after_s(), 3),
+                "ema_exec_ms": round(self._ema_exec_ms, 3),
                 **self.metrics.summary()}

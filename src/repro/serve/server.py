@@ -48,11 +48,14 @@ from repro.core.query import QueryBuildError
 from repro.core.sparql_exec import QueryResult, SparqlEngine
 from repro.obs import SlowQueryLog, Trace
 from repro.rdf.sparql import SparqlError
+from repro.resilience import faults
+from repro.resilience.cancel import CancelToken, QueryCancelled
 from repro.serve.cache import PlanCache, ResultCache
 from repro.serve.fingerprint import CanonicalQuery
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import (DeadlineExceeded, Overloaded, Scheduler,
-                                   SchedulerError)
+                                   SchedulerError, SchedulerShutdown,
+                                   SchedulerStopped)
 from repro.utils import get_logger
 
 log = get_logger("serve.server")
@@ -124,6 +127,7 @@ class DatasetRegistry:
             self._datasets[name] = ds
         self.metrics.attach_cache_gauges(name, plan_cache, result_cache)
         self.metrics.attach_param_family_gauge(name, engine)
+        self.metrics.attach_breaker_gauges(name, engine)
         return ds
 
     def get(self, name: str) -> HostedDataset:
@@ -204,15 +208,18 @@ class DatasetRegistry:
 
     # ----------------------------------------------------------- execution
     def execute_canonical(self, name: str, canon: CanonicalQuery,
-                          version: int, trace: Trace | None = None
-                          ) -> QueryResult:
+                          version: int, trace: Trace | None = None,
+                          cancel: CancelToken | None = None) -> QueryResult:
         """Execute over canonical variable names (scheduler entry point).
 
         ``trace`` is a live :class:`repro.obs.Trace` (forced request);
         when absent, ``trace_sample`` of executions get a sampled trace on
         the fast path.  Traced executions bypass the result cache (there is
         nothing to observe about returning a stored object) and feed the
-        slow-query log + span histograms."""
+        slow-query log + span histograms.  ``cancel`` is the flight's
+        cooperative-cancellation token: the executor polls it at chunk
+        boundaries, so expired/abandoned requests stop occupying the
+        device."""
         ds = self.get(name)
         key = (canon.fingerprint, version)
         if trace is None and self.trace_sample > 0.0 \
@@ -235,7 +242,8 @@ class DatasetRegistry:
             self.metrics.record_plan_search(compiled.plan_ms)
         res = ds.engine.execute_compiled(
             compiled, trace=trace,
-            profile=trace.profile_steps if trace is not None else False)
+            profile=trace.profile_steps if trace is not None else False,
+            cancel=cancel)
         est = res.stats.get("est_rows")
         if est is not None:
             self.metrics.record_cardinality(est, res.count)
@@ -257,6 +265,9 @@ class DatasetRegistry:
         compiles = sum(part.get("compiles", 0) for part in parts)
         if compiles:
             self.metrics.compile_events.inc(compiles)
+        degraded = sum(1 for part in parts if part.get("degraded_level"))
+        if degraded:
+            self.metrics.degraded.inc(degraded)
         if trace is not None:
             trace.finish()
             self.metrics.record_trace(trace)
@@ -272,7 +283,8 @@ class DatasetRegistry:
             ds.result_cache.put(key, res)
         return res
 
-    def execute_canonical_batch(self, name: str, pqs, version: int) -> list:
+    def execute_canonical_batch(self, name: str, pqs, version: int,
+                                cancel: CancelToken | None = None) -> list:
         """Answer a same-shape batch in one parameterized dispatch
         (scheduler batch-leader entry point).
 
@@ -297,7 +309,8 @@ class DatasetRegistry:
         if family is None:
             for i, pq in enumerate(pqs):
                 try:
-                    out[i] = self.execute_canonical(name, pq.canon, version)
+                    out[i] = self.execute_canonical(name, pq.canon, version,
+                                                    cancel=cancel)
                 except Exception as e:  # noqa: BLE001 — per-member fan-out
                     out[i] = e
             return out
@@ -313,7 +326,7 @@ class DatasetRegistry:
             return out
         try:
             results = ds.engine.execute_param_batch(
-                family, [pqs[i].consts for i in todo])
+                family, [pqs[i].consts for i in todo], cancel=cancel)
         except Exception as e:  # noqa: BLE001 — fail the executed members
             for i in todo:
                 out[i] = e
@@ -376,6 +389,7 @@ class DatasetRegistry:
                 "version": ds.version,
                 "plan_cache": ds.engine.plan_cache.snapshot(),
                 "result_cache": ds.result_cache.snapshot(),
+                "resilience": ds.engine.executor.resilience_snapshot(),
             }
             if ds.store is not None:
                 rec["store"] = {
@@ -413,26 +427,33 @@ class _Handler(BaseHTTPRequestHandler):
     def log_message(self, fmt: str, *args) -> None:  # route to our logger
         log.debug("%s %s", self.address_string(), fmt % args)
 
-    def _send(self, code: int, body: bytes, ctype: str) -> None:
+    def _send(self, code: int, body: bytes, ctype: str,
+              headers: dict[str, str] | None = None) -> None:
         self.send_response(code)
         self.send_header("Content-Type", ctype)
         self.send_header("Content-Length", str(len(body)))
+        for k, v in (headers or {}).items():
+            self.send_header(k, v)
         self.end_headers()
         self.wfile.write(body)
 
-    def _send_json(self, code: int, obj: dict) -> None:
+    def _send_json(self, code: int, obj: dict,
+                   headers: dict[str, str] | None = None) -> None:
         self._send(code, json.dumps(obj).encode(),
-                   "application/json; charset=utf-8")
+                   "application/json; charset=utf-8", headers)
 
-    def _error(self, code: int, message: str) -> None:
-        self._send_json(code, {"error": message})
+    def _error(self, code: int, message: str,
+               headers: dict[str, str] | None = None, **extra) -> None:
+        self._send_json(code, {"error": message, **extra}, headers)
 
     # ------------------------------------------------------------ endpoints
     def do_GET(self) -> None:  # noqa: N802 (http.server naming)
         url = urlparse(self.path)
         if url.path == "/healthz":
             self._send_json(200, {"status": "ok",
-                                  "datasets": self.server.registry.stats()})
+                                  "datasets": self.server.registry.stats(),
+                                  "scheduler": self.server.scheduler.snapshot(),
+                                  "faults": faults.describe()})
         elif url.path == "/metrics":
             text = self.server.metrics.registry.render()
             self._send(200, text.encode(), "text/plain; version=0.0.4")
@@ -579,9 +600,41 @@ class _Handler(BaseHTTPRequestHandler):
         except (SparqlError, QueryBuildError, PlanError) as e:
             self._error(400, str(e))
         except Overloaded as e:
-            self._error(503, str(e))
+            # admission control: tell clients when to come back
+            self._error(503, str(e),
+                        headers={"Retry-After":
+                                 str(max(1, round(e.retry_after_s)))},
+                        retry_after_s=round(e.retry_after_s, 3))
         except DeadlineExceeded as e:
-            self._error(504, str(e))
+            extra = {}
+            if e.queue_wait_ms is not None:
+                extra["queue_wait_ms"] = round(e.queue_wait_ms, 3)
+            if e.exec_ms is not None:
+                extra["exec_ms"] = round(e.exec_ms, 3)
+            self._error(504, str(e), **extra)
+        except QueryCancelled as e:
+            # distinct from 500: the engine stopped *cooperatively* at a
+            # chunk boundary; surface how far it got before the deadline
+            extra = {}
+            if e.queue_wait_ms is not None:
+                extra["queue_wait_ms"] = round(e.queue_wait_ms, 3)
+            if e.exec_ms is not None:
+                extra["exec_ms"] = round(e.exec_ms, 3)
+            if e.partial_stats:
+                parts = [part
+                         for br in (e.partial_stats.get("exec") or {})
+                         .get("branches", ())
+                         for part in [br.get("base") or {}]]
+                extra["partial"] = {
+                    "branches": len(parts),
+                    "chunks": sum(p.get("chunks", 0) for p in parts),
+                    "wall_ms": round(sum(p.get("wall_ms", 0.0)
+                                         for p in parts), 3),
+                }
+            self._error(504, f"cancelled: {e}", **extra)
+        except (SchedulerShutdown, SchedulerStopped) as e:
+            self._error(503, str(e),
+                        headers={"Retry-After": "1"})
         except SchedulerError as e:
             self._error(500, str(e))
         except Exception as e:  # noqa: BLE001 — never kill the handler thread

@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.rdf.dictionary import RDF_TYPE, RDFS_SUBCLASSOF
 from repro.rdf.graph import LabeledGraph, pack_bitmap
+from repro.resilience import faults as _faults
 from repro.store.delta import DeltaCOO, EdgeDelta
 from repro.store.update_parser import UpdateError, parse_update
 from repro.utils import get_logger
@@ -715,6 +716,9 @@ class VersionedStore:
         with self._lock:
             for op in ops:
                 self._validate_triples(op.action, op.triples)
+            # fault-injection site: after validation, before any mutation —
+            # an injected commit fault must leave the store untouched
+            _faults.fire("store_commit")
             inserted = deleted = 0
             for op in ops:
                 if op.action == "insert":

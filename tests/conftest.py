@@ -27,6 +27,63 @@ except ImportError:
     st = _AnyStrategy()
 
 
+# Fallback per-test timeout when pytest-timeout is absent (CI installs it;
+# the bare container may not).  SIGALRM-based, main-thread only, opt-in via
+# the same `@pytest.mark.timeout(N)` / --timeout=N interface so tests don't
+# care which implementation is active.
+import importlib.util as _ilu  # noqa: E402
+
+_HAVE_PYTEST_TIMEOUT = _ilu.find_spec("pytest_timeout") is not None
+
+if not _HAVE_PYTEST_TIMEOUT:
+    import signal
+    import threading
+
+    def pytest_addoption(parser):
+        parser.addoption("--timeout", type=float, default=None,
+                         help="per-test timeout in seconds (fallback shim; "
+                              "install pytest-timeout for the real thing)")
+        parser.addini("timeout", "per-test timeout in seconds (shim)",
+                      default=None)
+
+    def pytest_configure(config):
+        config.addinivalue_line(
+            "markers", "timeout(seconds): fail the test if it runs longer "
+            "(SIGALRM fallback shim)")
+
+    def _shim_timeout(item) -> float | None:
+        marker = item.get_closest_marker("timeout")
+        if marker is not None and marker.args:
+            return float(marker.args[0])
+        opt = item.config.getoption("--timeout")
+        if opt:
+            return float(opt)
+        ini = item.config.getini("timeout")
+        return float(ini) if ini else None
+
+    @pytest.hookimpl(hookwrapper=True)
+    def pytest_runtest_call(item):
+        seconds = _shim_timeout(item)
+        usable = (seconds and seconds > 0
+                  and hasattr(signal, "SIGALRM")
+                  and threading.current_thread() is threading.main_thread())
+        if not usable:
+            yield
+            return
+
+        def _on_alarm(signum, frame):
+            pytest.fail(f"test exceeded {seconds:g}s timeout (shim)",
+                        pytrace=False)
+
+        prev = signal.signal(signal.SIGALRM, _on_alarm)
+        signal.setitimer(signal.ITIMER_REAL, seconds)
+        try:
+            yield
+        finally:
+            signal.setitimer(signal.ITIMER_REAL, 0.0)
+            signal.signal(signal.SIGALRM, prev)
+
+
 @pytest.fixture(scope="session")
 def lubm_store():
     st = generate_lubm(scale=1, seed=0, density=0.3)
