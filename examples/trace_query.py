@@ -4,6 +4,11 @@ trace_event JSON for chrome://tracing / https://ui.perfetto.dev.
 
     PYTHONPATH=src python examples/trace_query.py
     PYTHONPATH=src python examples/trace_query.py --query Q8 --out trace.json
+
+``--workload-report`` additionally drives the standard LUBM+BSBM query
+mix through the serving stack with q-error feedback enabled and prints
+the merged workload report (the offline analogue of ``GET
+/debug/workload``; see ``python -m repro.obs.report --help``).
 """
 
 import argparse
@@ -19,6 +24,9 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--query", default="Q2", choices=sorted(LUBM_QUERIES))
 ap.add_argument("--scale", type=int, default=2)
 ap.add_argument("--out", default=None, help="write Chrome trace JSON here")
+ap.add_argument("--workload-report", action="store_true",
+                help="also run the mini LUBM+BSBM workload with q-error "
+                     "feedback enabled and print the markdown report")
 args = ap.parse_args()
 
 graph, maps = type_aware_transform(
@@ -59,3 +67,12 @@ if args.out:
         json.dump(chrome_trace([trace, trace2]), f)
     print(f"\nChrome trace written to {args.out} "
           "(open in chrome://tracing or ui.perfetto.dev)")
+
+# Mini workload report: many queries, aggregated — which shapes the
+# planner misestimates (q-error), what got pruned, what was re-planned
+# from observed cardinalities.
+if args.workload_report:
+    from repro.obs.report import demo_report, render_markdown
+
+    print("\nrunning mini LUBM+BSBM workload (feedback enabled) ...\n")
+    print(render_markdown(demo_report()))

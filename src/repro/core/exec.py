@@ -1298,6 +1298,7 @@ class Executor:
                               _empty(plan) if collect == "bindings" else None,
                               _empty_p(plan), np.zeros(0, np.int32))
         opts = self.opts if _opts_override is None else _opts_override
+        small_legacy = False  # remembered small-probe verdict applied?
         if (_opts_override is None and initial is None and trace is None
                 and not profile and _small_plan(plan, opts)):
             # B1-class small queries: the pipelined machinery's fixed
@@ -1328,10 +1329,16 @@ class Executor:
                 # probe is a single sample and ties should keep defaults
                 mode = t_leg < 0.9 * t_pipe
                 self._small_mode[sig] = mode
-                return res_l if mode else res
+                win = res_l if mode else res
+                win.stats["small_probe"] = {
+                    "t_pipelined_ms": round(t_pipe * 1e3, 3),
+                    "t_legacy_ms": round(t_leg * 1e3, 3),
+                    "legacy_wins": bool(mode)}
+                return win
             if mode:
                 opts = replace(opts, cap_schedule=False, suffix_resume=False,
                                async_chunks=1, use_fused=False)
+                small_legacy = True
         profile = opts.profile if profile is None else profile
         if trace is not None and trace.profile_steps:
             profile = True
@@ -1376,6 +1383,8 @@ class Executor:
         n_steps = len(plan.steps)
         npv = max(1, plan.n_pvars)
         stats = _empty_stats(n_steps)
+        if small_legacy:
+            stats["small_mode"] = True
 
         def check_cancel() -> None:
             if cancel is not None and cancel.expired:
@@ -1552,6 +1561,12 @@ class Executor:
 
         stats["caps"] = list(self._caps_cache[caps_key])
         stats["wall_ms"] = (time.perf_counter() - t_run0) * 1e3
+        # which kernel each step ran through — cheap host-side lookup,
+        # consumed by the workload profiler's kernel-mix accounting
+        stats["step_kernels"] = [
+            _step_kernel_name(dg, st, sarrs[si], opts,
+                              collect == "count" and si == n_steps - 1)
+            for si, st in enumerate(plan.steps)]
         if trace is not None and n_steps:
             _annotate_step_spans(trace, plan, dg, sarrs, opts, stats,
                                  collect, n_src)
@@ -1692,8 +1707,8 @@ class Executor:
                 f"query cancelled: {cancel.reason or 'cancelled'}")
         try:
             poison = _faults.fire("dispatch")
-            b, p, org, count, ovf_step, *_ = fn(chunk_in, count_in, p0, o0,
-                                                pmat, sarrs)
+            (b, p, org, count, ovf_step, totals, kepts, pins,
+             pouts) = fn(chunk_in, count_in, p0, o0, pmat, sarrs)
         except Exception as e:  # noqa: BLE001 - filtered just below
             if not is_transient_fault(e):
                 raise
@@ -1710,6 +1725,13 @@ class Executor:
         b_h = np.asarray(b) if collect == "bindings" else None
         p_h = np.asarray(p) if collect == "bindings" else None
         org_h = np.asarray(org) if collect == "bindings" else None
+        # per-lane step counters ([L_pad, n_steps]; -1 = frozen/no-probe,
+        # same sentinel contract as the single-query chunk program)
+        tot_h, kep_h = np.asarray(totals), np.asarray(kepts)
+        pin_h, pout_h = np.asarray(pins), np.asarray(pouts)
+        kernels = [_step_kernel_name(dg, st, sarrs[si], opts,
+                                     collect == "count" and si == n_steps - 1)
+                   for si, st in enumerate(plan.steps)]
         for li, qi in enumerate(live):
             if int(ovf_h[li]) < n_steps:
                 # overflowing lane: redo it alone — run()'s suffix-resume
@@ -1722,6 +1744,18 @@ class Executor:
             stats = _empty_stats(n_steps)
             stats["chunks"] = 1
             stats["batched"] = True
+            stats["batch_lanes"] = L_pad
+            stats["batch_fill"] = L / L_pad
+            stats["step_kernels"] = kernels
+            for si in range(n_steps):
+                if tot_h[li, si] >= 0:
+                    stats["step_rows"][si] = int(tot_h[li, si])
+                if kep_h[li, si] >= 0:
+                    stats["step_kept"][si] = int(kep_h[li, si])
+                if pin_h[li, si] >= 0:
+                    stats["step_prune_in"][si] = int(pin_h[li, si])
+                if pout_h[li, si] >= 0:
+                    stats["step_prune_out"][si] = int(pout_h[li, si])
             if collect == "bindings":
                 results[qi] = Result(c, b_h[li, :c].copy(),
                                      p_h[li, :c].copy(),

@@ -65,6 +65,8 @@ def build_plan(
     prebound: int = 0,
     prebound_pvars: int = 0,
     force_order: list[int] | None = None,
+    observed_fanout: dict[tuple[int, int, int, bool],
+                          tuple[float, float]] | None = None,
 ) -> ExecPlan:
     """Build an execution plan for a (sub-)query.
 
@@ -77,6 +79,14 @@ def build_plan(
     ``use_deg`` correspond to the paper's -NLF / -DEG toggles; ``use_sig``
     enables neighborhood-signature pruning (:mod:`repro.index`) of start
     and restart candidates plus per-step ``sig_mask`` probes.
+
+    ``observed_fanout`` injects workload feedback (see
+    :mod:`repro.obs.workload`): per-edge observed (surviving, raw)
+    fanouts keyed ``(child, parent, elabel, forward)`` replace the
+    static estimates in the cost model, so the order search and the
+    executor's capacity presizing both run on observed numbers.  The
+    sampled-order shortcut is skipped when feedback is present (its
+    sampled fanouts would mask the observed ones).
     """
     if estimate not in ESTIMATE_MODES:
         raise PlanError(f"unknown estimate mode {estimate!r}; "
@@ -89,7 +99,7 @@ def build_plan(
                         len(q.pvars), unsat=True)
     if q.n_vertices == 0:
         raise PlanError("empty query")
-    cm = CostModel(g)
+    cm = CostModel(g, observed=observed_fanout)
 
     sig_bits = get_index(g).n_bits if use_sig else None
 
@@ -211,9 +221,12 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
             if estimate == "sampled":
                 # live-store snapshots expose no raw CSR to sample from;
                 # the cost-model greedy order stands in (estimates only —
-                # snapshot answers used for candidates stay exact)
+                # snapshot answers used for candidates stay exact).  When
+                # workload feedback is active, sampling is skipped too so
+                # the observed fanouts in the cost model drive the order.
                 hit = sampled_order(g, q, s, cands, optional_groups) \
-                    if getattr(g, "supports_sampled_order", True) else None
+                    if (getattr(g, "supports_sampled_order", True)
+                        and not cm.observed) else None
                 if hit is not None:
                     order, sampled_fanout = hit
                 else:
@@ -236,7 +249,10 @@ def _build_base(g, cm: CostModel, q: QueryGraph, estimate, num_filters,
                 pos=len(global_order))
             steps.append(step)
             f_presize = sampled_fanout.get(w)
-            if f_presize is None and step.parent == s and cands.size:
+            if (step.u, step.parent, step.elabel,
+                    step.forward) in cm.observed:
+                f_presize = None  # f_card/f_raw already carry observed data
+            elif f_presize is None and step.parent == s and cands.size:
                 # first hop off the start vertex: probe the *actual*
                 # candidates (bounded sample) instead of the graph average
                 f_presize = cm.stats.sampled_fanout(step.elabel, step.forward,
@@ -403,6 +419,9 @@ def _emit_vertex_step(g, cm: CostModel, q: QueryGraph, w: int, placed: set[int],
     parent = e.u if forward else e.v
     f_card = cm.edge_cost(q, best_ei, parent)
     f_raw = cm.stats.avg_fanout(e.elabel, forward)
+    obs = cm.observed_fanout(q, best_ei, parent)
+    if obs is not None:
+        f_card, f_raw = obs[0], max(obs[0], obs[1])
     if e.pvar is not None:
         bound_pvars.setdefault(_pvar_idx(q, e), pos)
     # non-tree edges resolvable now (both endpoints placed after adding w)

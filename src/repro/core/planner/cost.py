@@ -25,12 +25,36 @@ _UNSET = object()
 
 
 class CostModel:
-    """Fanout / frequency / candidate estimates for one (graph, stats) pair."""
+    """Fanout / frequency / candidate estimates for one (graph, stats) pair.
 
-    def __init__(self, g: LabeledGraph, stats: GraphStats | None = None):
+    ``observed`` optionally carries workload feedback from
+    :mod:`repro.obs.workload`: per-edge observed ``(surviving, raw)``
+    fanouts keyed ``(child, parent, elabel, forward)`` over query-vertex
+    indices.  When an expansion matches a key, the observed surviving
+    fanout replaces the static estimate in :meth:`edge_cost`, so an
+    order-search re-run ranks edges by what actually happened instead of
+    what the graph statistics predicted.  Purely an estimator override —
+    it never changes which rows a plan produces.
+    """
+
+    def __init__(self, g: LabeledGraph, stats: GraphStats | None = None,
+                 observed: dict[tuple[int, int, int, bool],
+                                tuple[float, float]] | None = None):
         self.g = g
         self.stats = stats if stats is not None else get_stats(g)
+        self.observed = observed or {}
         self._summary = _UNSET
+
+    def observed_fanout(self, q: QueryGraph, ei: int,
+                        parent: int) -> tuple[float, float] | None:
+        """Workload-observed (surviving, raw) fanout for expanding edge
+        ``ei`` away from ``parent``, or ``None`` when unobserved."""
+        if not self.observed:
+            return None
+        e = q.edges[ei]
+        forward = e.u == parent
+        child = e.v if forward else e.u
+        return self.observed.get((child, parent, e.elabel, forward))
 
     @property
     def summary(self):
@@ -103,6 +127,9 @@ class CostModel:
         e = q.edges[ei]
         forward = e.u == parent
         child = e.v if forward else e.u
+        obs = self.observed.get((child, parent, e.elabel, forward))
+        if obs is not None:
+            return obs[0]
         qv = q.vertices[child]
         est = self.stats.avg_fanout(e.elabel, forward)
         if qv.bound_id >= 0:

@@ -15,6 +15,12 @@ pre-bound base column for OPTIONAL extension plans):
 - ``dp_order`` — exact dynamic program over placed-subsets (Held-Karp
   style) minimizing the estimated sum of intermediate table sizes; only
   attempted when the number of new vertices is ≤ ``DP_MAX_VERTICES``.
+
+The greedy and DP searches rank edges through ``cm.edge_cost``, so
+workload-observed fanout overrides (``CostModel.observed``, fed by
+:mod:`repro.obs.workload` q-error feedback) flow into order selection
+automatically; ``sampled_order`` bypasses the cost model and is skipped
+by the builder when feedback is active.
 """
 
 from __future__ import annotations

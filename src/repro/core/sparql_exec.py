@@ -28,12 +28,14 @@ from __future__ import annotations
 
 import contextlib
 import re as _re
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.core.exec import ExecOpts, Executor, Result
 from repro.core.planner import ExecPlan, build_plan, explain_plan, np_cmp
+from repro.obs.workload import qerror
 from repro.core.query import QueryGraph, build_query_graph
 from repro.resilience.cancel import CancelToken, QueryCancelled
 from repro.rdf.sparql import (Comparison, GroupPattern, Literal, Regex,
@@ -214,6 +216,11 @@ class SparqlEngine:
         # parameterized-family compilation accounting (a hit = a query
         # answered by an already-compiled shape plan)
         self.param_stats = CacheStats()
+        # workload feedback: fingerprint -> {"fanouts", "version"} —
+        # observed per-edge fanouts injected into the next compile of
+        # that fingerprint (see apply_feedback / repro.obs.workload)
+        self._feedback: dict[str, dict] = {}
+        self._feedback_lock = threading.Lock()
 
     # ------------------------------------------------------------------ API
     @property
@@ -240,6 +247,43 @@ class SparqlEngine:
             prev = self.executor
             self.executor = Executor(g, self.opts, policy=prev.policy,
                                      breaker=prev.breaker)
+
+    def apply_feedback(self, fingerprint: str, fanouts: dict) -> int:
+        """Install workload-observed per-edge fanouts for a fingerprint
+        and mark its cached plan stale.
+
+        ``fanouts`` maps ``(child, parent, elabel, forward)`` query-vertex
+        keys (stable across recompiles of the same canonical query) to
+        observed ``(surviving, raw)`` expansion factors — the shape
+        :meth:`repro.obs.workload.WorkloadProfile.observed_fanouts`
+        produces.  The next :meth:`compile_canonical` of this fingerprint
+        re-runs order search with those numbers injected into the cost
+        model (plan ``search`` gains a ``+fb<version>`` tag).  Bounded
+        (oldest fingerprints evicted) and versioned; results are
+        unchanged as multisets — only order search and capacity presizing
+        see the feedback.  Returns the new feedback version."""
+        clamp = lambda v: float(min(1e6, max(1e-4, v)))  # noqa: E731
+        clean = {k: (clamp(c), clamp(r)) for k, (c, r) in fanouts.items()}
+        with self._feedback_lock:
+            prev = self._feedback.pop(fingerprint, None)
+            version = (prev["version"] if prev else 0) + 1
+            self._feedback[fingerprint] = {"fanouts": clean,
+                                           "version": version}
+            while len(self._feedback) > 64:
+                self._feedback.pop(next(iter(self._feedback)))
+        self._plan_cache.pop(fingerprint)
+        return version
+
+    def clear_feedback(self) -> None:
+        """Drop all workload feedback (plans recompile without overrides
+        on their next cache miss)."""
+        with self._feedback_lock:
+            self._feedback.clear()
+
+    def feedback_snapshot(self) -> dict[str, int]:
+        """fingerprint -> feedback version, for debug endpoints."""
+        with self._feedback_lock:
+            return {fp: e["version"] for fp, e in self._feedback.items()}
 
     def compile(self, source: str | SelectQuery, trace=None):
         """Canonicalize + compile through the plan cache.
@@ -459,10 +503,19 @@ class SparqlEngine:
             rows = rows[family.offset:]
         if family.limit is not None:
             rows = rows[: family.limit]
+        # est_rows / step_card mirror execute_compiled so the serving
+        # layer's cardinality metrics + workload profiles cover the
+        # parameterized path too (estimates are per-shape, shared by
+        # every member of the family)
+        step_card = [(float(est), int(actual))
+                     for est, actual in zip(family.plan.est_rows,
+                                            res.stats.get("step_kept") or [])]
         return QueryResult(list(family.variables), rows, list(family.kinds),
                            count=int(rows.shape[0]),
                            stats={"plan_ms": family.plan_ms,
-                                  "exec": {"branches": [{"base": res.stats}]}})
+                                  "est_rows": family.plan.estimated_rows(),
+                                  "exec": {"branches": [{"base": res.stats}]},
+                                  "step_card": step_card})
 
     def execute_compiled(self, compiled: CompiledQuery,
                          collect: str = "bindings",
@@ -604,6 +657,7 @@ class SparqlEngine:
                                      inverse=canon.inverse)
         if run_stats is not None:
             out["actual_rows"] = res.count
+            out["q_error"] = round(qerror(out["est_total_rows"], res.count), 3)
         return out
 
     def explain_param(self, source: str | SelectQuery) -> dict:
@@ -674,8 +728,18 @@ class SparqlEngine:
 
     # --------------------------------------------------------- compilation
     def _compile_ast(self, ast: SelectQuery, fingerprint: str) -> CompiledQuery:
-        branches = [self._compile_group(g, ast.select)
-                    for g in self._expand_unions(ast.where)]
+        with self._feedback_lock:
+            fb = self._feedback.get(fingerprint)
+        # feedback fanouts are keyed by branch-0 query-vertex indices
+        # (profiles fold branch-0 base stats), so only that branch's base
+        # plan sees them; UNION siblings keep static estimates
+        branches = [self._compile_group(
+                        g, ast.select,
+                        observed=fb["fanouts"] if fb and i == 0 else None)
+                    for i, g in enumerate(self._expand_unions(ast.where))]
+        if fb and branches:
+            p = branches[0].plan
+            p.search = f"{p.search}+fb{fb['version']}"
         first = branches[0] if branches else None
         plan_ms = sum(br.plan.build_ms
                       + sum(co.plan.build_ms for co in br.optionals)
@@ -688,13 +752,15 @@ class SparqlEngine:
             plan_ms=plan_ms,
             distinct=ast.distinct, limit=ast.limit, offset=ast.offset)
 
-    def _compile_group(self, g: GroupPattern, select: list[str]) -> CompiledBranch:
+    def _compile_group(self, g: GroupPattern, select: list[str],
+                       observed: dict | None = None) -> CompiledBranch:
         q = build_query_graph(g.triples, self.maps)
         cheap, expensive = _split_filters(g.filters, q)
         plan = build_plan(self.graph, q, estimate=self.estimate,
                           num_filters=cheap,
                           use_nlf=self.opts.use_nlf, use_deg=self.opts.use_deg,
-                          use_sig=self.opts.use_prune)
+                          use_sig=self.opts.use_prune,
+                          observed_fanout=observed)
         q_all = q
         optionals: list[CompiledOptional] = []
         for og in g.optionals:
@@ -875,6 +941,9 @@ def _annotate_steps(plan_desc: dict, exec_stats: dict | None) -> None:
                 rec[dst] = int(vals[i])
         if rec.get("prune_in"):
             rec["prune_ratio"] = round(rec["prune_out"] / rec["prune_in"], 4)
+        if "actual_rows" in rec and rec.get("est_rows") is not None:
+            rec["q_error"] = round(qerror(rec["est_rows"],
+                                          rec["actual_rows"]), 3)
         wall = exec_stats.get("step_wall_ms")
         if wall is not None and i < len(wall):
             rec["wall_ms"] = round(float(wall[i]), 3)

@@ -86,7 +86,15 @@ def _build_registry(args) -> tuple[DatasetRegistry, dict[str, dict[str, str]]]:
     registry = DatasetRegistry(metrics,
                                result_cache_size=args.result_cache_size,
                                slow_log_size=args.slow_log,
-                               trace_sample=args.trace_sample)
+                               trace_sample=args.trace_sample,
+                               feedback=not getattr(args, "no_feedback",
+                                                    False),
+                               qerror_threshold=getattr(
+                                   args, "feedback_threshold", 8.0),
+                               feedback_min_runs=getattr(
+                                   args, "feedback_min_runs", 5),
+                               journal_size=getattr(args, "journal_size",
+                                                    512))
     workloads: dict[str, dict[str, str]] = {}
     for name in args.dataset.split(","):
         name = name.strip()
@@ -157,6 +165,19 @@ def _run_workload(args, registry: DatasetRegistry,
     print(f"service: qps={svc['qps']:.1f} p50={svc['p50_ms']:.2f}ms "
           f"p95={svc['p95_ms']:.2f}ms p99={svc['p99_ms']:.2f}ms "
           f"coalesced={summary['scheduler']['coalesced']:.0f}")
+    wl = registry.workload_snapshot(limit=5)
+    replans = sum(v for ds in wl["feedback"].values() for v in ds.values())
+    print(f"workload: {len(registry.workload)} profiles, "
+          f"decisions={sum(wl['decisions'].values()):.0f} "
+          f"{dict(wl['decisions'])}, feedback_replans={replans}")
+    for prof in wl["profiles"]:
+        if prof["q_error_median"] > 2.0:
+            print(f"  misestimated {prof['dataset']}/"
+                  f"{prof['plan_key'][:16]}: q-error median="
+                  f"{prof['q_error_median']:.1f} over {prof['runs']} runs"
+                  + (f" (replanned x{prof['replans']})"
+                     if prof["replans"] else ""))
+    summary["workload"] = wl
     if args.json:
         print(json.dumps({"queries": results, **summary}, indent=None))
     return results
@@ -209,6 +230,23 @@ def main(argv=None) -> None:
     ap.add_argument("--slow-log", type=int, default=32,
                     help="worst traced executions kept per dataset "
                          "(0 disables the slow-query log)")
+    obs = ap.add_argument_group(
+        "workload intelligence", "q-error accounting, decision journal, "
+        "observed-cardinality feedback (see README 'Observability')")
+    obs.add_argument("--no-feedback", action="store_true",
+                     help="disable observed-cardinality feedback into the "
+                          "planner (profiles and the journal stay on)")
+    obs.add_argument("--feedback-threshold", type=float, default=8.0,
+                     help="median worst-step q-error above which a cached "
+                          "plan is marked stale for re-planning")
+    obs.add_argument("--feedback-min-runs", type=int, default=5,
+                     help="runs a shape must accumulate before feedback "
+                          "can trigger")
+    obs.add_argument("--journal-size", type=int, default=512,
+                     help="decision-journal ring buffer entries")
+    obs.add_argument("--log-json", action="store_true",
+                     help="one-JSON-object-per-line logs (same as "
+                          "REPRO_LOG_FORMAT=json)")
     ap.add_argument("--json", action="store_true")
     ap.add_argument("--http", action="store_true",
                     help="serve HTTP instead of running the workload")
@@ -240,6 +278,10 @@ def main(argv=None) -> None:
                      help="how long a plan stays at its degraded level "
                           "before re-probing one level lower (default 30s)")
     args = ap.parse_args(argv)
+
+    if args.log_json:
+        from repro.utils import set_json_logging
+        set_json_logging(True)
 
     # retry/breaker knobs travel via env so every engine the registry
     # builds (RetryPolicy.from_env) picks them up without plumbing

@@ -68,7 +68,7 @@ class Trace:
     """
 
     __slots__ = ("trace_id", "name", "origin", "root", "_stack",
-                 "profile_steps", "sampled")
+                 "profile_steps", "sampled", "query_id", "dataset", "thread")
 
     def __init__(self, name: str = "query", *, profile_steps: bool = False,
                  sampled: bool = False):
@@ -79,6 +79,11 @@ class Trace:
         self._stack: list[Span] = [self.root]
         self.profile_steps = profile_steps
         self.sampled = sampled
+        # correlation labels, filled by the serving layer: the scheduler's
+        # query_id, the dataset served, and the worker thread that ran it
+        self.query_id: str | None = None
+        self.dataset: str | None = None
+        self.thread: str | None = None
 
     # ------------------------------------------------------------ recording
     def _now(self) -> float:
@@ -136,12 +141,19 @@ class Trace:
         return out
 
     def to_dict(self) -> dict:
-        return {"id": self.trace_id,
-                "sampled": self.sampled,
-                "profiled": self.profile_steps,
-                "dur_ms": round(self.dur_ms, 4),
-                "span_sum_ms": round(self.span_sum_ms(), 4),
-                "root": self.root.to_dict()}
+        d = {"id": self.trace_id,
+             "sampled": self.sampled,
+             "profiled": self.profile_steps,
+             "dur_ms": round(self.dur_ms, 4),
+             "span_sum_ms": round(self.span_sum_ms(), 4),
+             "root": self.root.to_dict()}
+        if self.query_id is not None:
+            d["query_id"] = self.query_id
+        if self.dataset is not None:
+            d["dataset"] = self.dataset
+        if self.thread is not None:
+            d["thread"] = self.thread
+        return d
 
 
 def _chrome_events(span: Span, pid: int, tid: int, out: list[dict]) -> None:
@@ -157,15 +169,32 @@ def _chrome_events(span: Span, pid: int, tid: int, out: list[dict]) -> None:
 
 def chrome_trace(traces: "Trace | list[Trace]", as_text: bool = False):
     """Render one or more traces as Chrome ``trace_event`` JSON (load in
-    chrome://tracing or https://ui.perfetto.dev).  Each trace becomes its
-    own thread lane."""
+    chrome://tracing or https://ui.perfetto.dev).
+
+    Traces are grouped into one process lane per dataset (``Trace.dataset``;
+    unlabeled traces share the default ``repro`` process) with
+    ``process_name`` / ``thread_name`` metadata events, so Perfetto shows
+    dataset and worker-thread names instead of bare pids/tids.  Each trace
+    is its own thread lane, labeled with the worker thread that ran it
+    (when the serving layer recorded one) plus the trace id / query id.
+    """
     if isinstance(traces, Trace):
         traces = [traces]
     events: list[dict] = []
     meta: list[dict] = []
+    pids: dict[str | None, int] = {}
     for tid, t in enumerate(traces, start=1):
-        meta.append({"name": "thread_name", "ph": "M", "pid": 1, "tid": tid,
-                     "args": {"name": f"{t.name}#{t.trace_id}"}})
-        _chrome_events(t.root, 1, tid, events)
+        ds = t.dataset
+        pid = pids.get(ds)
+        if pid is None:
+            pid = pids[ds] = len(pids) + 1
+            meta.append({"name": "process_name", "ph": "M", "pid": pid,
+                         "tid": 0,
+                         "args": {"name": f"dataset:{ds}" if ds else "repro"}})
+        label = t.thread or t.name
+        suffix = t.query_id or f"#{t.trace_id}"
+        meta.append({"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
+                     "args": {"name": f"{label} {suffix}"}})
+        _chrome_events(t.root, pid, tid, events)
     doc = {"traceEvents": meta + events, "displayTimeUnit": "ms"}
     return json.dumps(doc) if as_text else doc

@@ -318,6 +318,19 @@ class ServeMetrics:
             "abs log10 ratio of per-step estimated to actual binding-table "
             "rows (feeds the executor capacity schedule)",
             buckets=(0.1, 0.25, 0.5, 1.0, 2.0, 3.0, math.inf))
+        self.qerror = r.labeled_histogram(
+            "repro_qerror_log10",
+            "log10 q-error (max(est/actual, actual/est), +1-smoothed) of "
+            "cardinality estimates, by scope: whole-query vs per-step",
+            label="scope", buckets=(0.1, 0.25, 0.5, 1.0, 2.0, 3.0, math.inf),
+            reservoir=1024)
+        self.feedback_replans = r.counter(
+            "repro_feedback_replans_total",
+            "cached plans marked stale by workload q-error feedback "
+            "(next compile re-runs order search with observed fanouts)")
+        self.decisions = r.counter(
+            "repro_decisions_total",
+            "decision-journal entries recorded, by decision kind")
         self.exec_retries = r.counter(
             "repro_exec_step_retries_total",
             "executor capacity overflows (suffix-resume re-entries)")
@@ -406,9 +419,12 @@ class ServeMetrics:
 
     def record_cardinality(self, estimated: float, actual: int) -> None:
         """Estimate-vs-actual error as |log10((est+1)/(actual+1))| — 0 is a
-        perfect estimate, 1 is an order of magnitude off either way."""
+        perfect estimate, 1 is an order of magnitude off either way.  The
+        same value is log10 of the (+1-smoothed) q-error, so it also lands
+        in ``repro_qerror_log10{scope="query"}``."""
         err = abs(math.log10((max(0.0, estimated) + 1.0) / (actual + 1.0)))
         self.card_error.observe(err)
+        self.qerror.observe("query", err)
 
     def record_step_cardinality(self, estimated: float, actual: int) -> None:
         """Per-plan-step estimate-vs-actual row error (same log10 scale).
@@ -416,6 +432,7 @@ class ServeMetrics:
         bad guesses and leans on suffix-resume doublings."""
         err = abs(math.log10((max(0.0, estimated) + 1.0) / (actual + 1.0)))
         self.step_card_error.observe(err)
+        self.qerror.observe("step", err)
 
     def _qps(self) -> float:
         now = time.monotonic()

@@ -28,9 +28,11 @@ its deadline is dropped without executing.
 from __future__ import annotations
 
 import contextlib
+import itertools
 import queue
 import threading
 import time
+import uuid
 from dataclasses import dataclass, field
 
 from repro.core.sparql_exec import QueryResult
@@ -47,6 +49,19 @@ log = get_logger("serve.scheduler")
 def _maybe_span(trace, name: str, **meta):
     return (trace.span(name, **meta) if trace is not None
             else contextlib.nullcontext())
+
+
+# correlation ids: one per *flight* (coalesced waiters share their leader's
+# id — the id names the execution, not the HTTP request).  A short random
+# process prefix keeps ids from different server processes distinguishable
+# in merged logs.
+_qid_prefix = uuid.uuid4().hex[:6]
+_qid_counter = itertools.count(1)
+
+
+def next_query_id() -> str:
+    """Process-unique correlation id for one scheduled flight."""
+    return f"{_qid_prefix}-{next(_qid_counter):06d}"
 
 
 class SchedulerError(RuntimeError):
@@ -97,6 +112,7 @@ class _Flight:
     error: Exception | None = None
     waiters: int = 1
     trace: object | None = None  # repro.obs.Trace for forced-trace requests
+    query_id: str = ""  # correlation id, threaded through traces/logs/journal
     # same-shape batching: the parameterized form (None = batching-
     # ineligible), the batch key (dataset, shape, version), and whether a
     # batch leader already claimed this flight (its worker then skips it)
@@ -148,20 +164,22 @@ class Scheduler:
         self._can_batch = (batch_max > 1 and callable(
             getattr(registry, "execute_canonical_batch", None)))
         # duck-typed registries (tests, custom backends) may not know the
-        # ``cancel`` kwarg — probe the signature once
-        def _accepts_cancel(fn) -> bool:
+        # ``cancel`` / ``query_id`` kwargs — probe the signatures once
+        def _accepts(fn, name: str) -> bool:
             try:
                 import inspect
 
-                return fn is not None and "cancel" in inspect.signature(
+                return fn is not None and name in inspect.signature(
                     fn).parameters
             except (TypeError, ValueError):
                 return False
 
-        self._reg_accepts_cancel = _accepts_cancel(
-            getattr(registry, "execute_canonical", None))
-        self._batch_accepts_cancel = _accepts_cancel(
-            getattr(registry, "execute_canonical_batch", None))
+        reg_exec = getattr(registry, "execute_canonical", None)
+        reg_batch = getattr(registry, "execute_canonical_batch", None)
+        self._reg_accepts_cancel = _accepts(reg_exec, "cancel")
+        self._reg_accepts_qid = _accepts(reg_exec, "query_id")
+        self._batch_accepts_cancel = _accepts(reg_batch, "cancel")
+        self._batch_accepts_qids = _accepts(reg_batch, "query_ids")
         # EMA of execution time, for the Overloaded Retry-After estimate
         self._ema_exec_ms = 50.0
         self._queue: queue.Queue = queue.Queue()
@@ -311,8 +329,12 @@ class Scheduler:
                         retry_after_s=self.retry_after_s())
                 flight = _Flight(key=key, dataset=dataset, canonical=canon,
                                  version=version, deadline=deadline, trace=t,
+                                 query_id=next_query_id(),
                                  cancel=CancelToken(deadline),
                                  t_submit=time.monotonic())
+                if t is not None:
+                    t.query_id = flight.query_id
+                    t.dataset = dataset
                 if pq is not None:
                     flight.param = pq
                     flight.bkey = (dataset, pq.shape, version)
@@ -344,9 +366,11 @@ class Scheduler:
             self.metrics.record(dataset, "ok", ms)
             res = flight.result
             assert res is not None
+            stats = dict(res.stats)
+            stats["query_id"] = flight.query_id
             return QueryResult(canon.restore(res.variables), res.rows,
                                list(res.kinds), count=res.count,
-                               stats=dict(res.stats))
+                               stats=stats)
         finally:
             self.metrics.inflight.dec()
             self.metrics.dataset_inflight.dec(dataset)
@@ -416,6 +440,7 @@ class Scheduler:
                 self._run_batch(flight)
                 continue
             if flight.trace is not None:
+                flight.trace.thread = threading.current_thread().name
                 # forced traces never batch; record the (empty) assembly
                 # phase so batched and solo timelines stay comparable
                 t_asm = time.perf_counter()
@@ -432,6 +457,8 @@ class Scheduler:
                     kwargs["trace"] = flight.trace
                 if self._reg_accepts_cancel:
                     kwargs["cancel"] = flight.cancel
+                if self._reg_accepts_qid:
+                    kwargs["query_id"] = flight.query_id
                 result = self.registry.execute_canonical(
                     flight.dataset, flight.canonical, flight.version,
                     **kwargs)
@@ -516,6 +543,8 @@ class Scheduler:
         group = CancelToken(max(f.deadline for f in batch))
         try:
             kwargs = {"cancel": group} if self._batch_accepts_cancel else {}
+            if self._batch_accepts_qids:
+                kwargs["query_ids"] = [f.query_id for f in batch]
             out = self.registry.execute_canonical_batch(
                 leader.dataset, [f.param for f in batch], leader.version,
                 **kwargs)

@@ -19,7 +19,13 @@ bump is the explicit invalidation point for cached results.
   executions by fingerprint);
 - ``GET /debug/trace?id=N`` — one logged trace in full: span tree +
   EXPLAIN-ANALYZE-style plan, or Chrome ``trace_event`` JSON with
-  ``format=chrome`` (load in chrome://tracing / Perfetto).
+  ``format=chrome`` (load in chrome://tracing / Perfetto);
+- ``GET /debug/workload`` — per-(dataset, plan) workload profiles:
+  q-error accounting, observed fanouts, kernel mix, prune ratios,
+  batch-lane fill, plus each engine's applied-feedback versions;
+- ``GET /debug/decisions`` — the decision journal (plan-cache hits,
+  small-plan probes, batch coalescing, replans, cancellations), newest
+  first; filter with ``?kind=`` / ``?limit=``.
 
 ``/sparql`` additionally accepts ``trace=1``: the request executes in
 profiled mode with a forced :class:`repro.obs.Trace` and the response
@@ -35,9 +41,11 @@ piling onto the engine.
 
 from __future__ import annotations
 
+import hashlib
 import json
 import random
 import threading
+import time
 from dataclasses import dataclass, field
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from urllib.parse import parse_qs, urlparse
@@ -46,7 +54,8 @@ from repro.core.exec import ExecOpts
 from repro.core.planner import PlanError
 from repro.core.query import QueryBuildError
 from repro.core.sparql_exec import QueryResult, SparqlEngine
-from repro.obs import SlowQueryLog, Trace
+from repro.obs import (DecisionJournal, SlowQueryLog, Trace,
+                       WorkloadProfiler)
 from repro.rdf.sparql import SparqlError
 from repro.resilience import faults
 from repro.resilience.cancel import CancelToken, QueryCancelled
@@ -56,13 +65,19 @@ from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import (DeadlineExceeded, Overloaded, Scheduler,
                                    SchedulerError, SchedulerShutdown,
                                    SchedulerStopped)
-from repro.utils import get_logger
+from repro.utils import get_logger, log_event
 
 log = get_logger("serve.server")
 
 
 class UnknownDataset(KeyError):
     pass
+
+
+def _shape_key(shape: str) -> str:
+    """Short stable digest of a parameterized shape (the serialized shape
+    AST is too long for journal entries / workload profile keys)."""
+    return hashlib.sha1(shape.encode()).hexdigest()[:12]
 
 
 class UpdateNotSupported(ValueError):
@@ -90,14 +105,35 @@ class DatasetRegistry:
 
     def __init__(self, metrics: ServeMetrics | None = None, *,
                  plan_cache_size: int = 256, result_cache_size: int = 0,
-                 slow_log_size: int = 32, trace_sample: float = 0.0):
+                 slow_log_size: int = 32, trace_sample: float = 0.0,
+                 feedback: bool = False, qerror_threshold: float = 8.0,
+                 feedback_min_runs: int = 5, workload_size: int = 256,
+                 journal_size: int = 512):
         self.metrics = metrics or ServeMetrics()
         self._default_plan_cache_size = plan_cache_size
         self._default_result_cache_size = result_cache_size
         self._slow_log_size = slow_log_size
         self.trace_sample = min(1.0, max(0.0, float(trace_sample)))
+        # workload intelligence: every completed execution folds into a
+        # bounded per-(dataset, plan) profile, every engine choice lands in
+        # the journal.  ``feedback=True`` closes the loop — consistently
+        # misestimated shapes get their cached plan marked stale and the
+        # recompile re-runs order search with observed fanouts.  Off by
+        # default: feedback changes plan-cache behaviour (replans evict
+        # entries), which opt-in deployments should choose knowingly.
+        self.journal = DecisionJournal(journal_size)
+        self.workload = WorkloadProfiler(
+            max_profiles=workload_size, feedback=feedback,
+            qerror_threshold=qerror_threshold, min_runs=feedback_min_runs,
+            journal=self.journal)
         self._datasets: dict[str, HostedDataset] = {}
         self._lock = threading.Lock()
+
+    def _journal(self, kind: str, **fields) -> None:
+        """Record one engine decision + bump its Prometheus counter."""
+        self.journal.record(kind, **{k: v for k, v in fields.items()
+                                     if v is not None})
+        self.metrics.decisions.inc(kind=kind)
 
     # ------------------------------------------------------------- hosting
     def register(self, name: str, graph, maps, opts: ExecOpts | None = None,
@@ -209,7 +245,8 @@ class DatasetRegistry:
     # ----------------------------------------------------------- execution
     def execute_canonical(self, name: str, canon: CanonicalQuery,
                           version: int, trace: Trace | None = None,
-                          cancel: CancelToken | None = None) -> QueryResult:
+                          cancel: CancelToken | None = None,
+                          query_id: str | None = None) -> QueryResult:
         """Execute over canonical variable names (scheduler entry point).
 
         ``trace`` is a live :class:`repro.obs.Trace` (forced request);
@@ -225,9 +262,20 @@ class DatasetRegistry:
         if trace is None and self.trace_sample > 0.0 \
                 and random.random() < self.trace_sample:
             trace = Trace(sampled=True)
+        if trace is not None:
+            # correlation labels for the span tree / Chrome export
+            if trace.query_id is None:
+                trace.query_id = query_id
+            if trace.dataset is None:
+                trace.dataset = name
+            if trace.thread is None:
+                trace.thread = threading.current_thread().name
         if ds.result_cache.enabled and trace is None:
             hit = ds.result_cache.get(key)
             if hit is not None:
+                self._journal("result_cache", dataset=name, hit=True,
+                              query_id=query_id,
+                              fingerprint=canon.fingerprint)
                 return hit
         if trace is not None and trace.root.children:
             # scheduler-submitted trace: account the time between the
@@ -240,10 +288,20 @@ class DatasetRegistry:
                                                       trace=trace)
         if fresh:
             self.metrics.record_plan_search(compiled.plan_ms)
-        res = ds.engine.execute_compiled(
-            compiled, trace=trace,
-            profile=trace.profile_steps if trace is not None else False,
-            cancel=cancel)
+        self._journal("plan_cache", dataset=name, hit=not fresh,
+                      query_id=query_id, fingerprint=canon.fingerprint,
+                      search=(compiled.branches[0].plan.search
+                              if compiled.branches else None))
+        try:
+            res = ds.engine.execute_compiled(
+                compiled, trace=trace,
+                profile=trace.profile_steps if trace is not None else False,
+                cancel=cancel)
+        except QueryCancelled:
+            self._journal("cancel", dataset=name, query_id=query_id,
+                          fingerprint=canon.fingerprint)
+            self.workload.record_cancel(name, canon.fingerprint)
+            raise
         est = res.stats.get("est_rows")
         if est is not None:
             self.metrics.record_cardinality(est, res.count)
@@ -268,6 +326,45 @@ class DatasetRegistry:
         degraded = sum(1 for part in parts if part.get("degraded_level"))
         if degraded:
             self.metrics.degraded.inc(degraded)
+        branches = exec_stats.get("branches") or ()
+        base = (branches[0].get("base") or {}) if branches else {}
+        probe = base.get("small_probe")
+        if probe:
+            self._journal("small_probe", dataset=name, query_id=query_id,
+                          fingerprint=canon.fingerprint,
+                          legacy_wins=bool(probe.get("legacy_wins")),
+                          t_pipelined_ms=round(
+                              probe.get("t_pipelined_ms", 0.0), 3),
+                          t_legacy_ms=round(probe.get("t_legacy_ms", 0.0), 3))
+        self._journal("execute", dataset=name, query_id=query_id,
+                      fingerprint=canon.fingerprint, count=res.count,
+                      wall_ms=round(base.get("wall_ms") or 0.0, 3),
+                      small_mode=bool(base.get("small_mode")) or None,
+                      degraded=int(base.get("degraded_level") or 0) or None,
+                      prune=any(v >= 0 for v in
+                                base.get("step_prune_in") or ()) or None)
+        if base and compiled.branches:
+            # fold the run into the workload profile; feedback hints are
+            # only possible for single-branch queries (the profile tracks
+            # the branch-0 base plan, which for UNIONs is just one member)
+            hint = self.workload.observe(
+                name, canon.fingerprint, compiled.branches[0].plan, base,
+                count=res.count, wall_ms=base.get("wall_ms") or 0.0,
+                fingerprint=(canon.fingerprint
+                             if len(compiled.branches) == 1 else None))
+            if hint is not None:
+                fb_version = ds.engine.apply_feedback(hint["fingerprint"],
+                                                      hint["fanouts"])
+                self.metrics.feedback_replans.inc()
+                self._journal("replan", dataset=name, query_id=query_id,
+                              fingerprint=hint["fingerprint"],
+                              q_error=round(hint["q_error_median"], 2),
+                              version=fb_version)
+                log_event(log, "feedback_replan", dataset=name,
+                          query_id=query_id,
+                          fingerprint=hint["fingerprint"],
+                          q_error=round(hint["q_error_median"], 2),
+                          version=fb_version)
         if trace is not None:
             trace.finish()
             self.metrics.record_trace(trace)
@@ -284,7 +381,8 @@ class DatasetRegistry:
         return res
 
     def execute_canonical_batch(self, name: str, pqs, version: int,
-                                cancel: CancelToken | None = None) -> list:
+                                cancel: CancelToken | None = None,
+                                query_ids: list[str] | None = None) -> list:
         """Answer a same-shape batch in one parameterized dispatch
         (scheduler batch-leader entry point).
 
@@ -304,16 +402,23 @@ class DatasetRegistry:
         self.metrics.batch_size.observe(len(pqs))
         if len(pqs) >= 2:
             self.metrics.coalesced_queries.inc(len(pqs))
+        qids = query_ids or [None] * len(pqs)
         out: list = [None] * len(pqs)
         family = ds.engine.compile_param(pqs[0])
         if family is None:
+            self._journal("batch", dataset=name, size=len(pqs),
+                          query_id=qids[0], parameterized=False)
             for i, pq in enumerate(pqs):
                 try:
                     out[i] = self.execute_canonical(name, pq.canon, version,
-                                                    cancel=cancel)
+                                                    cancel=cancel,
+                                                    query_id=qids[i])
                 except Exception as e:  # noqa: BLE001 — per-member fan-out
                     out[i] = e
             return out
+        self._journal("batch", dataset=name, size=len(pqs),
+                      query_id=qids[0], parameterized=True,
+                      shape=_shape_key(family.shape))
         todo: list[int] = []
         for i, pq in enumerate(pqs):
             if ds.result_cache.enabled:
@@ -331,6 +436,7 @@ class DatasetRegistry:
             for i in todo:
                 out[i] = e
             return out
+        plan_key = f"shape:{_shape_key(family.shape)}"
         for i, res in zip(todo, results):
             pq = pqs[i]
             # shape-canonical -> caller-original -> exact-canonical names
@@ -339,6 +445,22 @@ class DatasetRegistry:
             r = QueryResult(names, res.rows, list(res.kinds),
                             count=res.count, stats=dict(res.stats))
             out[i] = r
+            # cardinality accounting on the batch path too: the member
+            # stats carry est_rows/step_card like the solo path does
+            est = res.stats.get("est_rows")
+            if est is not None:
+                self.metrics.record_cardinality(est, res.count)
+            for step_est, step_actual in res.stats.get("step_card", ()):
+                self.metrics.record_step_cardinality(step_est, step_actual)
+            mstats = (res.stats.get("exec") or {}).get("branches") or ()
+            mbase = (mstats[0].get("base") or {}) if mstats else {}
+            if mbase:
+                # profile per shape (the unit the parameterized plan is
+                # shared at); no feedback from here — the param family has
+                # no single fingerprint to mark stale
+                self.workload.observe(name, plan_key, family.plan, mbase,
+                                      count=res.count,
+                                      wall_ms=mbase.get("wall_ms") or 0.0)
             if ds.result_cache.enabled and version == ds.version:
                 ds.result_cache.put((pq.canon.fingerprint, version), r)
         return out
@@ -365,6 +487,18 @@ class DatasetRegistry:
         return self.get(name).engine.explain(sparql, analyze=analyze)
 
     # -------------------------------------------------------- observability
+    def workload_snapshot(self, limit: int | None = 50) -> dict:
+        """Workload profiles (worst q-error first) plus each engine's
+        applied-feedback versions — the ``/debug/workload`` payload."""
+        return {
+            "profiles": self.workload.snapshot(limit),
+            "feedback_enabled": self.workload.feedback,
+            "qerror_threshold": self.workload.qerror_threshold,
+            "feedback": {n: self.get(n).engine.feedback_snapshot()
+                         for n in self.names()},
+            "decisions": dict(self.journal.counts),
+        }
+
     def slow_summaries(self, name: str | None = None) -> dict:
         """Slow-query-log digests, per dataset (no span trees)."""
         names = [name] if name is not None else self.names()
@@ -469,6 +603,27 @@ class _Handler(BaseHTTPRequestHandler):
                 self._error(404, f"unknown dataset: {e}")
             else:
                 self._send_json(200, {"slow": out})
+        elif url.path == "/debug/workload":
+            params = {k: v[-1] for k, v in parse_qs(url.query).items()}
+            try:
+                limit = int(params.get("limit", 50))
+            except ValueError:
+                self._error(400, "non-integer 'limit' parameter")
+                return
+            self._send_json(200,
+                            self.server.registry.workload_snapshot(limit))
+        elif url.path == "/debug/decisions":
+            params = {k: v[-1] for k, v in parse_qs(url.query).items()}
+            try:
+                limit = int(params.get("limit", 100))
+            except ValueError:
+                self._error(400, "non-integer 'limit' parameter")
+                return
+            journal = self.server.registry.journal
+            self._send_json(200, {
+                "decisions": journal.snapshot(limit=limit,
+                                              kind=params.get("kind")),
+                "counts": dict(journal.counts)})
         elif url.path == "/debug/trace":
             params = {k: v[-1] for k, v in parse_qs(url.query).items()}
             try:
@@ -591,6 +746,7 @@ class _Handler(BaseHTTPRequestHandler):
                 if gate is not None:
                     gate.release()
             return
+        t0 = time.perf_counter()
         try:
             res = self.server.scheduler.submit(dataset, query,
                                                timeout_s=timeout_s,
@@ -601,6 +757,8 @@ class _Handler(BaseHTTPRequestHandler):
             self._error(400, str(e))
         except Overloaded as e:
             # admission control: tell clients when to come back
+            log_event(log, "sparql", dataset=dataset, status="overloaded",
+                      ms=round((time.perf_counter() - t0) * 1e3, 3))
             self._error(503, str(e),
                         headers={"Retry-After":
                                  str(max(1, round(e.retry_after_s)))},
@@ -611,6 +769,8 @@ class _Handler(BaseHTTPRequestHandler):
                 extra["queue_wait_ms"] = round(e.queue_wait_ms, 3)
             if e.exec_ms is not None:
                 extra["exec_ms"] = round(e.exec_ms, 3)
+            log_event(log, "sparql", dataset=dataset, status="timeout",
+                      ms=round((time.perf_counter() - t0) * 1e3, 3), **extra)
             self._error(504, str(e), **extra)
         except QueryCancelled as e:
             # distinct from 500: the engine stopped *cooperatively* at a
@@ -631,6 +791,8 @@ class _Handler(BaseHTTPRequestHandler):
                     "wall_ms": round(sum(p.get("wall_ms", 0.0)
                                          for p in parts), 3),
                 }
+            log_event(log, "sparql", dataset=dataset, status="cancelled",
+                      ms=round((time.perf_counter() - t0) * 1e3, 3))
             self._error(504, f"cancelled: {e}", **extra)
         except (SchedulerShutdown, SchedulerStopped) as e:
             self._error(503, str(e),
@@ -641,10 +803,18 @@ class _Handler(BaseHTTPRequestHandler):
             log.exception("internal error serving query")
             self._error(500, f"internal error: {e}")
         else:
+            qid = res.stats.get("query_id")
+            log_event(log, "sparql", query_id=qid, dataset=dataset,
+                      status="ok", count=res.count,
+                      ms=round((time.perf_counter() - t0) * 1e3, 3))
             out = _bindings_json(registry, dataset, res, limit)
+            if qid:
+                out["query_id"] = qid
             if trace and res.stats.get("trace") is not None:
                 out["trace"] = res.stats["trace"]
-            self._send_json(200, out)
+            self._send_json(200, out,
+                            headers={"X-Repro-Query-Id": qid} if qid
+                            else None)
 
 
 class SparqlHTTPServer(ThreadingHTTPServer):
